@@ -1,0 +1,56 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Every benchmark prints a compact CSV (name,us_per_call,derived) plus a
+human-readable table, and writes JSON to benchmarks/results/.  Default sizes
+run in minutes on one CPU core; set REPRO_BENCH_SCALE=full for paper-scale
+runs (millions of requests / items).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "quick")
+
+
+def scale(quick, full):
+    return full if SCALE == "full" else quick
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    return path
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def make_policies(N, C, T, B=1, eta=None, zeta=None, seed=0):
+    """The paper's comparison set, tuned per theory unless overridden."""
+    from repro.core.ftpl import FTPL
+    from repro.core.ogb import OGB
+    from repro.core.policies import ARC, LFU, LRU
+
+    return {
+        "OGB": OGB(N, C, eta=eta, horizon=None if eta else T, batch_size=B, seed=seed),
+        "FTPL": FTPL(N, C, zeta=zeta, horizon=None if zeta else T, seed=seed),
+        "LRU": LRU(N, C),
+        "LFU": LFU(N, C),
+        "ARC": ARC(N, C),
+    }

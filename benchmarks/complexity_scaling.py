@@ -1,0 +1,64 @@
+"""The paper's headline claim: O(log N) amortized per-request complexity.
+
+Wall-clock per request vs catalog size for OGB (lazy, O(log N)) against
+OGB_cl (eager projection, Theta(N log N) per request at B=1) and the O(1)/
+O(log C) classics.  OGB's curve must stay ~flat in N while OGB_cl blows up —
+the reason prior no-regret evaluations stopped at 10^4 items (paper Fig. 1).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.cachesim.traces import zipf
+from repro.core.ftpl import FTPL
+from repro.core.ogb import OGB
+from repro.core.ogb_classic import OGBClassic
+from repro.core.policies import LRU
+
+from .common import csv_row, save_json, scale
+
+
+def main() -> dict:
+    sizes = scale([10_000, 100_000, 1_000_000], [10_000, 100_000, 1_000_000, 10_000_000])
+    T = scale(50_000, 200_000)
+    T_cl = scale(300, 1000)  # OGB_cl is too slow for full T at large N
+    out = {}
+    for N in sizes:
+        C = N // 20
+        trace = zipf(N, T, alpha=0.8, seed=13)
+        row = {}
+        for name, policy, t_use in [
+            ("OGB", OGB(N, C, horizon=T), T),
+            ("FTPL", FTPL(N, C, horizon=T), T),
+            ("LRU", LRU(N, C), T),
+            ("OGB_cl", OGBClassic(N, C, horizon=T), T_cl),
+        ]:
+            t0 = time.perf_counter()
+            for j in trace[:t_use]:
+                policy.request(int(j))
+            us = 1e6 * (time.perf_counter() - t0) / t_use
+            row[name] = us
+            csv_row(f"complexity/N={N}/{name}", us, f"C={C}")
+        out[N] = row
+        print(
+            f"N={N:>10,}: "
+            + "  ".join(f"{k}={v:9.2f}us" for k, v in row.items())
+        )
+
+    # O(log N): 100x catalog growth must cost < 4x per-request time for OGB
+    ns = sorted(out)
+    growth_ogb = out[ns[-1]]["OGB"] / out[ns[0]]["OGB"]
+    growth_cl = out[ns[-1]]["OGB_cl"] / max(out[ns[0]]["OGB_cl"], 1e-9)
+    print(f"\nOGB growth over {ns[-1]//ns[0]}x catalog: {growth_ogb:.2f}x "
+          f"(OGB_cl: {growth_cl:.1f}x)")
+    assert growth_ogb < 5.0
+    assert growth_cl > 10.0
+    save_json("complexity_scaling", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,270 @@
+"""§Roofline — three-term roofline per (arch x shape) cell.
+
+Terms (per chip, seconds), TPU v5e constants (197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI):
+
+  compute    = FLOPs_per_chip / 197e12
+  memory     = HBM_bytes_per_chip / 819e9
+  collective = collective_bytes_per_chip / 50e9
+
+Sources — and an important measurement note.  XLA's ``cost_analysis()`` counts
+a ``while`` body ONCE, but our layer stacks are lax.scan loops (the body runs
+L times), so raw cost_analysis under-counts by ~L.  We therefore use:
+
+  * collective bytes: parsed from the optimized HLO with while-trip-count
+    correction (repro.launch.hlo_analysis) — fully derived from the compiled
+    artifact;
+  * FLOPs and HBM bytes: explicit analytic models (formulas below), because
+    the aggregate cost numbers cannot be trip-count-corrected post hoc.  Raw
+    cost_analysis values are still recorded in the dry-run JSONs as
+    structural evidence.
+
+FLOPs model (global, divided by chip count):
+  matmul  = k * N_matmul * tokens           k = 6 train (fwd+bwd), 2 inference
+  remat   = x4/3 on train matmul+attention  (one extra forward)
+  attn    = 6|2 * B*S^2*H*hd per full-attention layer (causal half included)
+  decode attn = 4 * B*S_kv*H*hd per layer
+  rwkv    = 8 * D*hd_rwkv per token/layer; mamba = 6*d_in*n + 2*W*d_in
+MoE overcompute from the capacity factor is reported via useful_flops_ratio.
+
+HBM model (per chip):
+  params:   P_shard * (4B read + 8B opt traffic [f32] | 4B [bf16 moments])
+            for train; P_shard * 2B read for inference
+  KV cache: full read (+write of 1 token) for decode; write for prefill
+  acts:     tokens_chip * L * (12 D + 6 F_active) * 2B * (3 train | 1 inf)
+  logits:   2 * tokens_chip * V_pad/model_shards * 4B
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs.base import SHAPES, get_arch
+
+from .common import RESULTS_DIR, save_json
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+VOCAB_PAD = 256
+FSDP_THRESHOLD = 2.0e10
+
+
+def _n_attn_layers(cfg) -> int:
+    if cfg.family == "ssm":
+        return 0
+    n = cfg.n_layers // cfg.attn_period if cfg.attn_period else cfg.n_layers
+    if cfg.family == "encdec":
+        n += cfg.n_encoder_layers + cfg.n_layers  # self-enc + cross
+    return n
+
+
+def analytic_flops(cfg, shp) -> Dict[str, float]:
+    pv = -(-cfg.vocab_size // VOCAB_PAD) * VOCAB_PAD
+    n_matmul = cfg.active_param_count() - pv * cfg.d_model  # embed gather is free
+    B, S = shp.global_batch, shp.seq_len
+    train = shp.kind == "train"
+    k = 6.0 if train else 2.0
+    tokens = B * S if shp.kind != "decode" else B
+
+    matmul = k * n_matmul * tokens
+
+    attn = 0.0
+    if cfg.n_heads:
+        hhd = cfg.n_heads * cfg.head_dim
+        la = _n_attn_layers(cfg)
+        if shp.kind == "decode":
+            attn = 4.0 * B * S * hhd * la
+        else:
+            attn = k * B * (S ** 2) * hhd * la / 2.0  # causal half
+
+    rec = 0.0
+    if cfg.family == "ssm":
+        rec = 8.0 * cfg.d_model * cfg.rwkv_head_dim * tokens * cfg.n_layers
+        rec *= 3.0 if train else 1.0
+    if cfg.family == "hybrid":
+        d_in = cfg.ssm_expand * cfg.d_model
+        n_mamba = cfg.n_layers - cfg.n_layers // cfg.attn_period
+        rec = (6.0 * d_in * cfg.ssm_state_dim + 2.0 * cfg.ssm_conv_width * d_in)
+        rec *= tokens * n_mamba * (3.0 if train else 1.0)
+
+    remat = 4.0 / 3.0 if (train and cfg.remat) else 1.0
+    total = (matmul + attn) * remat + rec
+    return {"total": total, "matmul": matmul, "attn": attn, "recurrent": rec}
+
+
+def analytic_hbm_bytes(cfg, shp, n_dev: int, model_shards: int = 16) -> float:
+    pv = -(-cfg.vocab_size // VOCAB_PAD) * VOCAB_PAD
+    P = cfg.param_count()
+    fsdp = P > FSDP_THRESHOLD
+    p_shard = P / (model_shards * (n_dev // model_shards if fsdp else 1))
+    B, S = shp.global_batch, shp.seq_len
+    train = shp.kind == "train"
+    tokens_chip = (B * S if shp.kind != "decode" else B) / n_dev
+
+    if train:
+        mom_bytes = 2 if P > FSDP_THRESHOLD else 4
+        param_traffic = p_shard * (4 + 4 + 4 * mom_bytes)  # read+write + m,v RW
+    else:
+        param_traffic = p_shard * 2
+
+    kv = 0.0
+    if cfg.n_kv_heads:
+        la = cfg.n_layers // cfg.attn_period if cfg.attn_period else cfg.n_layers
+        # §Perf H3: int8 KV stores 1B/elem + one f32 scale per (token, head)
+        kv_elem_bytes = (
+            1.0 + 4.0 / cfg.head_dim if cfg.kv_cache_dtype == "int8" else 2.0
+        )
+        kv_total = 2.0 * la * B * S * cfg.n_kv_heads * cfg.head_dim * kv_elem_bytes
+        if shp.kind == "decode":
+            kv = kv_total / n_dev  # full read of the sharded cache
+        elif shp.kind == "prefill":
+            kv = kv_total / n_dev  # write once
+
+    f_active = cfg.expert_ff * cfg.experts_per_token if cfg.n_experts else cfg.d_ff
+    acts = tokens_chip * cfg.n_layers * (12 * cfg.d_model + 6 * f_active) * 2
+    acts *= 3.0 if train else 1.0
+
+    logits = 2.0 * tokens_chip * (pv / model_shards) * 4
+    if shp.kind == "decode":
+        logits = 2.0 * tokens_chip * (pv / model_shards) * 4
+
+    return param_traffic + kv + acts + logits
+
+
+def load_cells(mesh_kind: str) -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh_kind}.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def analyze(mesh_kind: str = "single") -> List[Dict]:
+    rows = []
+    for r in load_cells(mesh_kind):
+        if not r.get("ok"):
+            rows.append({"arch": r["arch"], "shape": r["shape"], "ok": False,
+                         "error": r.get("error", "")[:120]})
+            continue
+        if r["arch"] == "ogb-cache-dataplane":
+            # the paper-technique cell: HLO terms are exact here (one psum
+            # per bisection iteration, no layer scan inside)
+            n_dev = r["n_devices"]
+            t_comp = (r.get("flops") or 0) / PEAK
+            t_mem = (r.get("bytes_accessed") or 0) / HBM
+            t_coll = (r.get("collective_bytes_corrected_total") or 0) / ICI
+            terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+            rows.append({
+                "arch": r["arch"], "shape": r["shape"], "ok": True,
+                "n_devices": n_dev,
+                "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+                "dominant": max(terms, key=terms.get),
+                "roofline_fraction": t_comp / max(max(terms.values()), 1e-30),
+                "useful_flops_ratio": 1.0,
+                "model_flops": r.get("flops"),
+                "hbm_bytes_chip": r.get("bytes_accessed"),
+                "collective_bytes_chip": r.get("collective_bytes_corrected_total"),
+                "temp_bytes_gib": (r.get("temp_size_bytes") or 0) / 2**30,
+                "fits_hbm16": True,
+                "compile_s": r.get("compile_s"),
+            })
+            continue
+        cfg = get_arch(r["arch"])
+        shp = SHAPES[r["shape"]]
+        n_dev = r["n_devices"]
+
+        fl = analytic_flops(cfg, shp)
+        t_comp = fl["total"] / n_dev / PEAK
+        hbm = analytic_hbm_bytes(cfg, shp, n_dev)
+        t_mem = hbm / HBM
+        coll = r.get("collective_bytes_corrected_total")
+        if coll is None:
+            coll = r.get("collective_bytes_total", 0.0)
+        t_coll = coll / ICI
+
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        dom = max(terms, key=terms.get)
+        bound = max(terms.values())
+        frac = t_comp / bound if bound > 0 else float("nan")
+        # useful ratio: model matmul+attn flops without remat vs total issued
+        useful = (fl["matmul"] + fl["attn"] + fl["recurrent"]) / max(fl["total"], 1)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "ok": True,
+            "n_devices": n_dev,
+            "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+            # serialized vs perfectly-overlapped step bounds: the ratio is the
+            # headroom available to async-collective scheduling (time-side
+            # lever; the §Perf campaign attacks the byte-side)
+            "step_serial_s": sum(terms.values()),
+            "step_overlapped_s": bound,
+            "overlap_headroom": sum(terms.values()) / bound if bound > 0 else 1.0,
+            "dominant": dom, "roofline_fraction": frac,
+            "useful_flops_ratio": useful,
+            "model_flops": fl["total"],
+            "hbm_bytes_chip": hbm,
+            "collective_bytes_chip": coll,
+            "hlo_flops_raw": r.get("flops"),
+            "hlo_bytes_raw": r.get("bytes_accessed"),
+            "temp_bytes_gib": (r.get("temp_size_bytes") or 0) / 2**30,
+            "fits_hbm16": ((r.get("temp_size_bytes") or 0)
+                           + (r.get("argument_size_bytes") or 0)) < 16 * 2**30,
+            "compile_s": r.get("compile_s"),
+        })
+    return rows
+
+
+def recommendation(row: Dict) -> str:
+    if not row.get("ok"):
+        return "fix the failure first"
+    d = row["dominant"]
+    if d == "collective":
+        return ("cut collective bytes: shard the MoE dispatch buffer over data, "
+                "all-to-all instead of all-gather, overlap with compute")
+    if d == "memory":
+        return ("raise arithmetic intensity: fuse projection+bisection sweeps "
+                "(Pallas), bf16 optimizer I/O, bigger per-chip batch")
+    return "near compute bound: overlap the remaining collectives; tune tiles"
+
+
+def render_markdown(rows: List[Dict]) -> str:
+    out = [
+        "| arch | shape | compute s | memory s | collective s | dominant | roofline frac | fits 16G | bottleneck fix |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | FAILED {r['error']} | | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | **{r['dominant']}** "
+            f"| {r['roofline_fraction']:.3f} | {'y' if r['fits_hbm16'] else 'n'} "
+            f"| {recommendation(r)[:60]} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> List[Dict]:
+    rows = analyze("single")
+    print(render_markdown(rows))
+    ok = [r for r in rows if r.get("ok")]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        coll = max(ok, key=lambda r: r["collective_s"])
+        print(f"\nworst roofline fraction: {worst['arch']}/{worst['shape']}"
+              f" ({worst['roofline_fraction']:.3f})")
+        print(f"most collective-bound:  {coll['arch']}/{coll['shape']}"
+              f" ({coll['collective_s']:.3e}s)")
+    save_json("roofline_single", rows)
+    save_json("roofline_multi", analyze("multi"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

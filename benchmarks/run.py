@@ -1,0 +1,72 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus readable summaries) and
+writes JSON to benchmarks/results/.  REPRO_BENCH_SCALE=full for paper-scale
+runs; default sizes finish in minutes on one CPU core.
+
+  python -m benchmarks.run            # all figures
+  python -m benchmarks.run fig2 fig9  # a subset
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import (
+    complexity_scaling,
+    kernel_sweeps,
+    fig2_adversarial,
+    fig3_sensitivity_short,
+    fig4_sensitivity_long,
+    fig7_8_traces,
+    fig9_occupancy,
+    fig10_batched,
+    fig11_locality,
+)
+
+SUITES = {
+    "fig2": fig2_adversarial.main,
+    "fig3": fig3_sensitivity_short.main,
+    "fig4": fig4_sensitivity_long.main,
+    "fig7_8": fig7_8_traces.main,
+    "fig9": fig9_occupancy.main,
+    "fig10": fig10_batched.main,
+    "fig11": fig11_locality.main,
+    "complexity": complexity_scaling.main,
+    "kernels": kernel_sweeps.main,
+}
+
+
+def _roofline():
+    # imported lazily: needs dry-run artifacts to exist
+    from . import roofline
+
+    return roofline.main()
+
+
+SUITES["roofline"] = _roofline
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(SUITES)
+    failures = []
+    for name in wanted:
+        fn = SUITES.get(name)
+        if fn is None:
+            print(f"unknown suite {name!r}; available: {sorted(SUITES)}")
+            continue
+        print(f"\n=== {name} " + "=" * (70 - len(name)))
+        try:
+            fn()
+        except Exception as e:
+            failures.append((name, e))
+            traceback.print_exc()
+    if failures:
+        print("\nFAILED suites:", [n for n, _ in failures])
+        raise SystemExit(1)
+    print("\nall benchmark suites passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end serving driver (the paper's kind: caching at the serving layer).
+
+Serves a small LM with batched requests through the ServeEngine; the OGB
+policy manages the prefix-page pool.  The workload interleaves a hot set of
+system prompts with one-shot scans — the regime where LRU page pools thrash
+and OGB's regret guarantee pays off.  Compares OGB vs LRU page pools on
+identical request streams.
+
+    PYTHONPATH=src python examples/serve_cached.py
+"""
+
+import numpy as np
+
+import jax
+
+from repro.configs.base import get_smoke
+from repro.core.ogb import OGB
+from repro.core.policies import LRU
+from repro.models.model import init_params
+from repro.serve.engine import ServeEngine
+from repro.serve.kvcache import PagedKVPool
+
+
+def request_stream(rng, vocab, n_steps=150, batch=4, prompt_len=48):
+    """Hot system-prompts + cold scans, batched.
+
+    Every step serves 2 hot prompts and 2 one-shot scans; the scan pages
+    (~12/step) exceed the pool over a few steps, so a recency policy keeps
+    evicting the hot set — the paper's adversarial motif at the page level.
+    """
+    hot = [rng.integers(1, vocab, prompt_len) for _ in range(6)]
+    for step in range(n_steps):
+        batch_prompts = []
+        for b in range(batch):
+            if b < 2:
+                batch_prompts.append(hot[(2 * step + b) % len(hot)])
+            else:  # one-shot scan prompt
+                batch_prompts.append(rng.integers(1, vocab, prompt_len))
+        yield np.stack(batch_prompts).astype(np.int32)
+
+
+def run(pool_policy_name: str, seed: int = 0):
+    cfg = get_smoke("mistral-nemo-12b")
+    params = init_params(cfg, jax.random.key(seed))
+    C_pages = 24
+    n_steps = 150
+    # ~24 page touches per engine step (4 prompts x 6 pages)
+    horizon_touches = n_steps * 24
+    if pool_policy_name == "ogb":
+        policy = OGB(catalog_size=1 << 16, capacity=C_pages,
+                     horizon=horizon_touches, batch_size=24, seed=seed)
+    else:
+        policy = LRU(1 << 16, C_pages)
+    pool = PagedKVPool(policy, page_size=8)
+    engine = ServeEngine(cfg, params, pool=pool, max_len=64)
+
+    rng = np.random.default_rng(seed)
+    for prompts in request_stream(rng, cfg.vocab_size, n_steps=n_steps):
+        out = engine.generate(prompts, max_new_tokens=4)
+    return engine, pool
+
+
+def main():
+    print("serving a smoke-scale mistral-nemo with OGB vs LRU page pools\n")
+    for name in ["ogb", "lru"]:
+        engine, pool = run(name)
+        s, p = engine.stats, pool.stats
+        print(
+            f"  {name.upper():>4} pool: prefix reuse {s.prefix_reuse:6.1%}   "
+            f"page hits {p.page_hit_ratio:6.1%}   "
+            f"decode tok {s.decode_tokens}   "
+            f"prefill tok {s.prefill_tokens} (skipped {s.prefill_tokens_skipped})"
+        )
+    print("\nOGB keeps the hot system prompts resident through the scans;")
+    print("its regret bound guarantees this for ANY request pattern.")
+
+
+if __name__ == "__main__":
+    main()

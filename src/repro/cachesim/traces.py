@@ -1,0 +1,220 @@
+"""Synthetic request-trace generators calibrated to the paper's traces.
+
+The four real traces the paper uses (SNIA ``ms-ex``/``systor``, Wikipedia
+``cdn``, Twitter cluster-45) are network-gated in this environment, so each
+generator below is calibrated to the statistics the paper itself reports:
+
+* ``adversarial``  — paper §2.2 / Fig 2: round-robin over the catalog with a
+  fresh random permutation each round.  Any recency/frequency policy gets a
+  ~0 hit ratio; OPT gets C/N; gradient policies approach OPT.
+* ``zipf``         — stationary Zipf(alpha) popularity: the ``cdn`` regime
+  (Fig 8 left: near-stationary, OPT >> LRU, items regularly re-requested,
+  large lifetimes/reuse distances — Fig 11).
+* ``shifting_zipf``— Zipf popularity re-permuted every ``phase`` requests:
+  the ``ms-ex`` regime (Fig 7 left: OPT's windowed hit ratio highly variable,
+  online policies must track the shifts).
+* ``bursty``       — Zipf base traffic + a stream of short-lived items
+  requested in concentrated bursts: the ``twitter`` regime (Fig 8 right:
+  LRU > OPT; ~20% of attainable hits come from items with lifetime < 100
+  requests — Fig 11 left), which is also the regime where batching (B > 1)
+  hurts (Fig 10 right).
+* ``scan_mix``     — looping sequential scans over disjoint ranges plus a hot
+  set: the ``systor``/VDI block-storage regime (Fig 7 right).
+
+All generators return ``np.ndarray[int64]`` of item ids in ``[0, N)`` and are
+deterministic per seed.  ``trace_stats`` recomputes the paper's §B.2
+lifetime / reuse-distance statistics so the calibration is checkable.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+
+def _zipf_weights(n: int, alpha: float) -> np.ndarray:
+    w = 1.0 / np.power(np.arange(1, n + 1, dtype=np.float64), alpha)
+    return w / w.sum()
+
+
+def adversarial(N: int, T: int, seed: int = 0) -> np.ndarray:
+    """Round-robin with per-round random permutation (paper Fig 2)."""
+    rng = np.random.default_rng(seed)
+    rounds = T // N + 1
+    out = np.empty(rounds * N, dtype=np.int64)
+    for r in range(rounds):
+        out[r * N : (r + 1) * N] = rng.permutation(N)
+    return out[:T]
+
+
+def zipf(N: int, T: int, alpha: float = 0.8, seed: int = 0) -> np.ndarray:
+    """Stationary Zipf(alpha) — cdn-like."""
+    rng = np.random.default_rng(seed)
+    w = _zipf_weights(N, alpha)
+    return rng.choice(N, size=T, p=w).astype(np.int64)
+
+
+def shifting_zipf(
+    N: int, T: int, alpha: float = 0.9, phase: int = 100_000, seed: int = 0
+) -> np.ndarray:
+    """Zipf with popularity ranks re-permuted every ``phase`` requests — ms-ex-like."""
+    rng = np.random.default_rng(seed)
+    w = _zipf_weights(N, alpha)
+    out = np.empty(T, dtype=np.int64)
+    t = 0
+    while t < T:
+        n = min(phase, T - t)
+        perm = rng.permutation(N)
+        draws = rng.choice(N, size=n, p=w)
+        out[t : t + n] = perm[draws]
+        t += n
+    return out
+
+
+def bursty(
+    N: int,
+    T: int,
+    alpha: float = 0.7,
+    burst_fraction: float = 0.35,
+    burst_len_mean: float = 6.0,
+    burst_span: int = 80,
+    seed: int = 0,
+) -> np.ndarray:
+    """Zipf base + short-lived bursty items — twitter-like (paper §B.2).
+
+    ``burst_fraction`` of requests go to one-shot items whose entire lifetime
+    (first to last request) spans < ``burst_span`` requests; each such item is
+    requested Geom(1/burst_len_mean)+1 times in a tight window.  These items
+    produce hits for recency policies but not for any static allocation, and
+    they lose their hits when the batch size B exceeds their lifetime.
+    """
+    rng = np.random.default_rng(seed)
+    n_base = int(N * 0.5)
+    w = _zipf_weights(n_base, alpha)
+    base = rng.choice(n_base, size=T, p=w).astype(np.int64)
+    out = base.copy()
+    # overlay bursts on a burst_fraction of slots, ids from the upper half
+    n_burst_requests = int(T * burst_fraction)
+    next_burst_id = n_base
+    t = 0
+    placed = 0
+    while placed < n_burst_requests and t < T - burst_span:
+        k = 1 + rng.geometric(1.0 / burst_len_mean)
+        k = int(min(k, burst_span // 2, n_burst_requests - placed))
+        if k <= 0:
+            break
+        pos = t + np.sort(rng.choice(burst_span, size=max(k, 1), replace=False))
+        item = next_burst_id
+        next_burst_id += 1
+        if next_burst_id >= N:
+            next_burst_id = n_base
+        out[pos] = item
+        placed += k
+        # advance so bursts tile the trace roughly uniformly
+        t += max(1, int(burst_span * k / max(n_burst_requests / (T / burst_span), 1e-9) / burst_span))
+        t += rng.integers(1, 4)
+    return out
+
+
+def scan_mix(
+    N: int,
+    T: int,
+    hot_fraction: float = 0.55,
+    hot_items: Optional[int] = None,
+    scan_len: int = 2000,
+    seed: int = 0,
+) -> np.ndarray:
+    """Hot working set + looping sequential scans — systor/VDI-like."""
+    rng = np.random.default_rng(seed)
+    hot_n = hot_items if hot_items is not None else max(N // 20, 1)
+    w = _zipf_weights(hot_n, 1.0)
+    out = np.empty(T, dtype=np.int64)
+    t = 0
+    scan_base = hot_n
+    while t < T:
+        if rng.random() < hot_fraction:
+            n = min(rng.integers(50, 400), T - t)
+            out[t : t + n] = rng.choice(hot_n, size=n, p=w)
+        else:
+            n = min(scan_len, T - t)
+            start = scan_base + int(rng.integers(0, max(N - scan_base - scan_len, 1)))
+            out[t : t + n] = (start + np.arange(n)) % N
+        t += n
+    return out
+
+
+TRACE_REGISTRY = {
+    "adversarial": adversarial,
+    "zipf": zipf,
+    "cdn_like": zipf,
+    "shifting_zipf": shifting_zipf,
+    "ms_ex_like": shifting_zipf,
+    "bursty": bursty,
+    "twitter_like": bursty,
+    "scan_mix": scan_mix,
+    "systor_like": scan_mix,
+}
+
+
+def make_trace(kind: str, N: int, T: int, seed: int = 0, **kw) -> np.ndarray:
+    return TRACE_REGISTRY[kind](N, T, seed=seed, **kw)
+
+
+# ---------------------------------------------------------------------------
+# paper §B.2 statistics: item lifetime and reuse distance
+# ---------------------------------------------------------------------------
+@dataclass
+class TraceStats:
+    catalog: int
+    length: int
+    unique: int
+    lifetime_by_item: Dict[int, int]
+    max_hits_by_item: Dict[int, int]  # requests-1 (infinite-cache hits)
+
+    def hit_share_lifetime_below(self, L: int) -> float:
+        """Fraction of infinite-cache hits from items with lifetime < L
+        (paper Fig 11 left)."""
+        tot = sum(self.max_hits_by_item.values())
+        if tot == 0:
+            return 0.0
+        short = sum(
+            h
+            for i, h in self.max_hits_by_item.items()
+            if self.lifetime_by_item[i] < L
+        )
+        return short / tot
+
+
+def trace_stats(trace: np.ndarray) -> TraceStats:
+    first: Dict[int, int] = {}
+    last: Dict[int, int] = {}
+    count: Dict[int, int] = {}
+    for t, j in enumerate(trace):
+        j = int(j)
+        if j not in first:
+            first[j] = t
+        last[j] = t
+        count[j] = count.get(j, 0) + 1
+    lifetime = {i: last[i] - first[i] for i in first}
+    max_hits = {i: count[i] - 1 for i in count}
+    return TraceStats(
+        catalog=int(trace.max()) + 1 if len(trace) else 0,
+        length=len(trace),
+        unique=len(first),
+        lifetime_by_item=lifetime,
+        max_hits_by_item=max_hits,
+    )
+
+
+def reuse_distances(trace: np.ndarray) -> np.ndarray:
+    """Timestamp gaps between consecutive requests of the same item (Fig 11 right)."""
+    lastpos: Dict[int, int] = {}
+    out = []
+    for t, j in enumerate(trace):
+        j = int(j)
+        if j in lastpos:
+            out.append(t - lastpos[j])
+        lastpos[j] = t
+    return np.asarray(out, dtype=np.int64)

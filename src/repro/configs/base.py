@@ -1,0 +1,205 @@
+"""Architecture + shape configuration system.
+
+Every assigned architecture is an :class:`ArchConfig` (exact published dims)
+plus a reduced ``smoke()`` variant for CPU tests.  Input shapes are the four
+assigned workloads; ``cells()`` enumerates the (arch x shape) dry-run grid,
+honouring the mandated skips (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # --- attention details ---
+    mlp_activation: str = "swiglu"  # swiglu | geglu
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0  # expert hidden dim (0 -> use d_ff)
+    moe_every: int = 1  # MoE on layers with index % moe_every == moe_offset
+    moe_offset: int = 0
+    capacity_factor: float = 1.25
+    # --- hybrid (jamba): one attention layer per `attn_period`, rest Mamba ---
+    attn_period: int = 0  # 0 => pure attention (or pure ssm for family=ssm)
+    ssm_state_dim: int = 16
+    ssm_conv_width: int = 4
+    ssm_expand: int = 2
+    # --- rwkv ---
+    rwkv_head_dim: int = 64
+    # --- encoder-decoder (whisper) ---
+    n_encoder_layers: int = 0
+    n_audio_frames: int = 1500  # stubbed conv frontend output length
+    # --- vlm ---
+    n_image_tokens: int = 0
+    # --- numerics / training ---
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    # "full" recomputes everything in the backward (re-running the TP
+    # all-reduces); "save_tp" checkpoints the post-collective block outputs
+    # so recompute never re-issues collectives (§Perf H1b: -1/3 AR volume)
+    remat_policy: str = "save_tp"
+    # "compute" stores KV in compute_dtype; "int8" stores per-token-per-head
+    # symmetric-quantized KV (halves decode HBM traffic — §Perf H3)
+    kv_cache_dtype: str = "compute"
+    # --- notes (provenance) ---
+    source: str = ""
+
+    @property
+    def group_size(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    @property
+    def expert_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic sequence mixing => long_500k applies."""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + layers)."""
+        d, v = self.d_model, self.vocab_size
+        emb = v * d * 2  # in + out (untied)
+        att = d * self.n_heads * self.head_dim + 2 * d * self.n_kv_heads * self.head_dim
+        att += self.n_heads * self.head_dim * d
+        dense_mlp = 3 * d * self.d_ff
+        total = emb
+        for layer in range(self.n_layers):
+            if self.family == "ssm":
+                d_in = self.ssm_expand * d
+                total += 2 * d * d_in + d_in * d + 3 * d * self.d_ff
+                continue
+            is_attn = (
+                self.attn_period == 0 or (layer % self.attn_period) == (self.attn_period - 1)
+            )
+            if is_attn:
+                total += att
+            else:  # mamba layer
+                d_in = self.ssm_expand * d
+                total += 2 * d * d_in + d_in * d + d_in * (2 * self.ssm_state_dim + 1)
+            is_moe = (
+                self.n_experts > 0 and (layer % self.moe_every) == self.moe_offset
+            )
+            if is_moe:
+                total += self.n_experts * 3 * d * self.expert_ff + d * self.n_experts
+            else:
+                total += dense_mlp
+        if self.n_encoder_layers:
+            total += self.n_encoder_layers * (att + dense_mlp)
+            total += self.n_layers * att  # decoder cross-attention
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE top-k instead of all experts)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        full = self.param_count()
+        n_moe_layers = len(
+            [
+                l
+                for l in range(self.n_layers)
+                if (l % self.moe_every) == self.moe_offset
+            ]
+        )
+        all_e = n_moe_layers * self.n_experts * 3 * self.d_model * self.expert_ff
+        act_e = n_moe_layers * self.experts_per_token * 3 * self.d_model * self.expert_ff
+        return full - all_e + act_e
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+_REGISTRY: Dict[str, ArchConfig] = {}
+_SMOKE: Dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig, smoke: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    _SMOKE[cfg.name] = smoke
+    return cfg
+
+
+def get_arch(name: str) -> ArchConfig:
+    _ensure_loaded()
+    return _REGISTRY[name]
+
+
+def get_smoke(name: str) -> ArchConfig:
+    _ensure_loaded()
+    return _SMOKE[name]
+
+
+def list_archs() -> List[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def shape_applicable(arch: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Mandated skip rules (DESIGN.md §5)."""
+    if shape.name == "long_500k" and not arch.supports_long_context:
+        return False, "long_500k needs sub-quadratic attention (skip: full-attention arch)"
+    return True, ""
+
+
+def cells() -> List[Tuple[str, str]]:
+    """All runnable (arch, shape) dry-run cells."""
+    _ensure_loaded()
+    out = []
+    for a in list_archs():
+        arch = get_arch(a)
+        for s, shp in SHAPES.items():
+            ok, _ = shape_applicable(arch, shp)
+            if ok:
+                out.append((a, s))
+    return out
+
+
+def _ensure_loaded() -> None:
+    if _REGISTRY:
+        return
+    from . import (  # noqa: F401
+        gemma_7b,
+        glm4_9b,
+        granite_moe_1b_a400m,
+        jamba_1p5_large,
+        kimi_k2,
+        mistral_nemo_12b,
+        phi3_vision,
+        qwen3_14b,
+        rwkv6_1b6,
+        whisper_large_v3,
+    )

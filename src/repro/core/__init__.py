@@ -1,0 +1,32 @@
+# The paper's primary contribution: OGB, an integral online gradient-based
+# caching policy with O(log N) amortized per-request complexity and
+# sublinear-regret guarantees (Carra & Neglia, 2024).
+from .ftpl import FTPL, theoretical_zeta
+from .ogb import OGB, OGBStats, theoretical_eta, theoretical_regret_bound
+from .ogb_classic import OGBClassic, madow_sample
+from .ogb_sized import SizedOGB, project_weighted, weighted_capped_simplex_tau
+from .policies import ARC, FIFO, GDS, LFU, LRU, make_policy
+from .projection import (
+    capped_simplex_tau,
+    capped_simplex_tau_bisect,
+    project_capped_simplex,
+)
+from .regret import (
+    best_static_hits,
+    best_static_set,
+    opt_windowed_hit_ratio,
+    prefix_opt_hits,
+    regret_curve,
+)
+from .treap import SortedKeyStore, Treap, make_store
+
+__all__ = [
+    "OGB", "OGBStats", "OGBClassic", "FTPL", "SizedOGB",
+    "project_weighted", "weighted_capped_simplex_tau",
+    "LRU", "LFU", "FIFO", "ARC", "GDS", "make_policy",
+    "make_store", "Treap", "SortedKeyStore",
+    "capped_simplex_tau", "capped_simplex_tau_bisect", "project_capped_simplex",
+    "madow_sample", "theoretical_eta", "theoretical_zeta",
+    "theoretical_regret_bound", "best_static_hits", "best_static_set",
+    "opt_windowed_hit_ratio", "prefix_opt_hits", "regret_curve",
+]

@@ -1,0 +1,163 @@
+"""Size-aware OGB — the paper's §8 future work, implemented.
+
+Items have sizes s_i (bytes); the knapsack-relaxed feasible set is
+F_s = {f in [0,1]^N : sum_i s_i f_i = C}.  The Euclidean projection becomes
+
+    f_i = clip(y_i - s_i * tau, 0, 1)          (KKT of the weighted program)
+
+so the uniform-subtraction trick generalizes *per size class*: group items
+into K size classes (realistic caches quantize object sizes anyway — slab
+allocators); within class k every interior coordinate is lowered by
+s_k * tau, so a per-class accumulator rho_k = s_k * rho_base and a per-class
+ordered structure preserve the lazy O(log N) update — total O(K log N)
+amortized per request, with K ~ 8-32 slab classes in practice.
+
+The reward of a hit is proportional to the item's size (bytes served from
+cache), matching the cost-aware setting w_{t,i} = s_i.
+
+Correctness: property-tested against the eager weighted-projection oracle
+(tests/core/test_ogb_sized.py).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .treap import make_store
+
+
+def weighted_capped_simplex_tau(
+    y: np.ndarray, sizes: np.ndarray, C: float, iters: int = 100
+) -> float:
+    """Solve sum_i s_i * clip(y_i - s_i*tau, 0, 1) = C by bisection.
+
+    Monotone in tau (each term non-increasing), so bisection is exact to
+    2^-iters of the bracket."""
+    y = np.asarray(y, np.float64)
+    s = np.asarray(sizes, np.float64)
+    lo = 0.0
+    hi = float(np.max(y / s)) + 1.0
+
+    def g(tau):
+        return float(np.sum(s * np.clip(y - s * tau, 0.0, 1.0)))
+
+    if g(0.0) <= C:
+        return 0.0
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        if g(mid) >= C:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def project_weighted(y: np.ndarray, sizes: np.ndarray, C: float) -> np.ndarray:
+    tau = weighted_capped_simplex_tau(y, sizes, C)
+    return np.clip(y - np.asarray(sizes, np.float64) * tau, 0.0, 1.0)
+
+
+class SizedOGB:
+    """Lazy size-aware OGB over K size classes.
+
+    State per class k: ordered structure z_k of unadjusted values, and the
+    invariant f_i = f̃_i - s_k * R for active i in class k, where R is the
+    global accumulated multiplier (sum of per-request tau's).
+    """
+
+    name = "SizedOGB"
+
+    def __init__(
+        self,
+        sizes_by_class: Sequence[float],  # size of each class (K,)
+        item_class: Dict[int, int],  # item -> class index
+        capacity: float,  # total bytes
+        eta: float,
+        seed: int = 0,
+    ):
+        self.s = [float(x) for x in sizes_by_class]
+        self.K = len(self.s)
+        self.item_class = dict(item_class)
+        self.C = float(capacity)
+        self.eta = float(eta)
+        self.R = 0.0  # accumulated multiplier: f_i = f̃_i - s_k * R
+        self.f_tilde: Dict[int, float] = {}
+        self.z = [make_store("sorted", seed=seed + k) for k in range(self.K)]
+        self.mass = 0.0  # current sum_i s_i f_i (maintained incrementally)
+
+    def value(self, i: int) -> float:
+        v = self.f_tilde.get(i)
+        if v is None:
+            return 0.0
+        k = self.item_class[i]
+        return min(max(v - self.s[k] * self.R, 0.0), 1.0)
+
+    def fractional_vector(self, n: int) -> np.ndarray:
+        f = np.zeros(n)
+        for i in self.f_tilde:
+            f[i] = self.value(i)
+        return f
+
+    # -- the lazy weighted projection -----------------------------------
+    def update(self, j: int, weight: Optional[float] = None) -> None:
+        """One request for item j; ascent step eta * w_j (default w = s_j)."""
+        kj = self.item_class[j]
+        sj = self.s[kj]
+        w = sj if weight is None else weight
+        step = self.eta * w
+
+        fj_old = self.value(j)
+        if fj_old >= 1.0 - 1e-12:
+            return
+        # raise coordinate j (clip the step so f_j <= 1: the one-clip case)
+        step = min(step, 1.0 - fj_old)
+        if j in self.f_tilde:
+            self.z[kj].remove(self.f_tilde[j], j)
+            self.f_tilde[j] += step
+        else:
+            self.f_tilde[j] = sj * self.R + step
+        self.z[kj].insert(self.f_tilde[j], j)
+        self.mass += sj * step
+        if self.mass <= self.C + 1e-12:
+            return
+
+        # remove the excess: find dR with sum_k s_k^2 * m_k * dR = excess,
+        # popping coordinates that hit zero (amortized O(1) pops/request)
+        excess = self.mass - self.C
+        while excess > 1e-15:
+            denom = sum(
+                (self.s[k] ** 2) * len(self.z[k]) for k in range(self.K)
+            )
+            if denom <= 0:
+                break
+            dR = excess / denom
+            # find the earliest-clipping coordinate across classes
+            popped_any = False
+            for k in range(self.K):
+                while len(self.z[k]) > 0:
+                    key, i = self.z[k].min()
+                    val = key - self.s[k] * self.R
+                    if val <= self.s[k] * dR + 1e-18:
+                        # coordinate i hits zero before absorbing s_k*dR
+                        self.z[k].pop_min()
+                        del self.f_tilde[i]
+                        excess -= self.s[k] * val
+                        self.mass -= self.s[k] * val
+                        popped_any = True
+                    else:
+                        break
+            if popped_any:
+                continue  # recompute denom with the survivors
+            # no coordinate clips: apply the uniform multiplier and finish
+            self.R += dR
+            self.mass -= denom * dR
+            excess = 0.0
+
+    # convenience: byte hit ratio bookkeeping ---------------------------
+    def fractional_byte_reward(self, i: int) -> float:
+        k = self.item_class[i]
+        return self.s[k] * self.value(i)

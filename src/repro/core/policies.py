@@ -1,0 +1,254 @@
+"""Classic caching policies the paper compares against.
+
+LRU, LFU, FIFO: O(1) per request.  ARC (Megiddo & Modha 2003): O(1).
+GDS (Cao & Irani 1997): O(log C).  All expose the simulator interface
+``request(i) -> hit``, ``contains(i)``, ``occupancy()``, ``batch_end()``.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, Optional
+
+from .treap import make_store
+
+
+class _Base:
+    def __init__(self, catalog_size: int, capacity: int, **_):
+        self.N = int(catalog_size)
+        self.C = int(capacity)
+        self.hits = 0
+        self.requests = 0
+
+    def batch_end(self) -> None:
+        pass
+
+    def _account(self, hit: bool) -> bool:
+        self.requests += 1
+        self.hits += int(hit)
+        return hit
+
+
+class LRU(_Base):
+    name = "LRU"
+
+    def __init__(self, catalog_size: int, capacity: int, **kw):
+        super().__init__(catalog_size, capacity)
+        self._od: "OrderedDict[int, None]" = OrderedDict()
+
+    def contains(self, i: int) -> bool:
+        return i in self._od
+
+    def occupancy(self) -> int:
+        return len(self._od)
+
+    def request(self, i: int) -> bool:
+        hit = i in self._od
+        if hit:
+            self._od.move_to_end(i)
+        else:
+            if len(self._od) >= self.C:
+                self._od.popitem(last=False)
+            self._od[i] = None
+        return self._account(hit)
+
+
+class FIFO(_Base):
+    name = "FIFO"
+
+    def __init__(self, catalog_size: int, capacity: int, **kw):
+        super().__init__(catalog_size, capacity)
+        self._od: "OrderedDict[int, None]" = OrderedDict()
+
+    def contains(self, i: int) -> bool:
+        return i in self._od
+
+    def occupancy(self) -> int:
+        return len(self._od)
+
+    def request(self, i: int) -> bool:
+        hit = i in self._od
+        if not hit:
+            if len(self._od) >= self.C:
+                self._od.popitem(last=False)
+            self._od[i] = None
+        return self._account(hit)
+
+
+class LFU(_Base):
+    """In-cache LFU with LRU tie-break (perfect-LFU counters kept for all items)."""
+
+    name = "LFU"
+
+    def __init__(self, catalog_size: int, capacity: int, **kw):
+        super().__init__(catalog_size, capacity)
+        self._freq: Dict[int, int] = {}
+        self._cached: Dict[int, tuple] = {}  # item -> (freq, tick) key in order
+        self._order = make_store("sorted")
+        self._tick = 0
+
+    def contains(self, i: int) -> bool:
+        return i in self._cached
+
+    def occupancy(self) -> int:
+        return len(self._cached)
+
+    def request(self, i: int) -> bool:
+        self._tick += 1
+        f = self._freq.get(i, 0) + 1
+        self._freq[i] = f
+        hit = i in self._cached
+        if hit:
+            old = self._cached[i]
+            self._order.remove(old, i)
+            key = (f, self._tick)
+            self._order.insert(key, i)
+            self._cached[i] = key
+        else:
+            if len(self._cached) >= self.C:
+                # evict min (freq, tick): least frequent, oldest among ties
+                mk, mi = self._order.min()
+                # admit only if the newcomer's frequency beats the victim's
+                if f >= mk[0]:
+                    self._order.pop_min()
+                    del self._cached[mi]
+                    key = (f, self._tick)
+                    self._order.insert(key, i)
+                    self._cached[i] = key
+            else:
+                key = (f, self._tick)
+                self._order.insert(key, i)
+                self._cached[i] = key
+        return self._account(hit)
+
+
+class GDS(_Base):
+    """Greedy-Dual-Size (unit size, unit cost ⇒ GDS reduces to LRU-with-aging;
+    we keep the H = L + cost/size machinery so non-unit weights plug in)."""
+
+    name = "GDS"
+
+    def __init__(self, catalog_size: int, capacity: int, cost: float = 1.0, **kw):
+        super().__init__(catalog_size, capacity)
+        self._L = 0.0
+        self._cost = cost
+        self._h: Dict[int, float] = {}
+        self._order = make_store("sorted")
+
+    def contains(self, i: int) -> bool:
+        return i in self._h
+
+    def occupancy(self) -> int:
+        return len(self._h)
+
+    def request(self, i: int) -> bool:
+        hit = i in self._h
+        if hit:
+            self._order.remove(self._h[i], i)
+        else:
+            if len(self._h) >= self.C:
+                hmin, imin = self._order.pop_min()
+                self._L = hmin
+                del self._h[imin]
+        h = self._L + self._cost
+        self._h[i] = h
+        self._order.insert(h, i)
+        return self._account(hit)
+
+
+class ARC(_Base):
+    """Adaptive Replacement Cache (Megiddo & Modha, FAST'03) — exact."""
+
+    name = "ARC"
+
+    def __init__(self, catalog_size: int, capacity: int, **kw):
+        super().__init__(catalog_size, capacity)
+        self.p = 0.0
+        self.t1: "OrderedDict[int, None]" = OrderedDict()  # recent, seen once
+        self.t2: "OrderedDict[int, None]" = OrderedDict()  # frequent
+        self.b1: "OrderedDict[int, None]" = OrderedDict()  # ghost of t1
+        self.b2: "OrderedDict[int, None]" = OrderedDict()  # ghost of t2
+
+    def contains(self, i: int) -> bool:
+        return i in self.t1 or i in self.t2
+
+    def occupancy(self) -> int:
+        return len(self.t1) + len(self.t2)
+
+    def _replace(self, in_b2: bool) -> None:
+        if self.t1 and (
+            len(self.t1) > self.p or (in_b2 and len(self.t1) == int(self.p))
+        ):
+            old, _ = self.t1.popitem(last=False)
+            self.b1[old] = None
+        elif self.t2:
+            old, _ = self.t2.popitem(last=False)
+            self.b2[old] = None
+        elif self.t1:
+            old, _ = self.t1.popitem(last=False)
+            self.b1[old] = None
+
+    def request(self, i: int) -> bool:
+        C = self.C
+        if i in self.t1 or i in self.t2:  # case I: hit
+            if i in self.t1:
+                del self.t1[i]
+            else:
+                del self.t2[i]
+            self.t2[i] = None
+            return self._account(True)
+        if i in self.b1:  # case II: ghost hit in b1
+            self.p = min(float(C), self.p + max(len(self.b2) / max(len(self.b1), 1), 1.0))
+            self._replace(False)
+            del self.b1[i]
+            self.t2[i] = None
+            return self._account(False)
+        if i in self.b2:  # case III: ghost hit in b2
+            self.p = max(0.0, self.p - max(len(self.b1) / max(len(self.b2), 1), 1.0))
+            self._replace(True)
+            del self.b2[i]
+            self.t2[i] = None
+            return self._account(False)
+        # case IV: full miss
+        if len(self.t1) + len(self.b1) == C:
+            if len(self.t1) < C:
+                self.b1.popitem(last=False)
+                self._replace(False)
+            else:
+                self.t1.popitem(last=False)
+        elif len(self.t1) + len(self.b1) < C:
+            total = len(self.t1) + len(self.t2) + len(self.b1) + len(self.b2)
+            if total >= C:
+                if total == 2 * C:
+                    self.b2.popitem(last=False)
+                self._replace(False)
+        self.t1[i] = None
+        return self._account(False)
+
+
+POLICY_REGISTRY = {
+    "lru": LRU,
+    "fifo": FIFO,
+    "lfu": LFU,
+    "gds": GDS,
+    "arc": ARC,
+}
+
+
+def make_policy(kind: str, catalog_size: int, capacity: int, **kw):
+    kind = kind.lower()
+    if kind in POLICY_REGISTRY:
+        return POLICY_REGISTRY[kind](catalog_size, capacity, **kw)
+    if kind == "ogb":
+        from .ogb import OGB
+
+        return OGB(catalog_size, capacity, **kw)
+    if kind == "ogb_cl":
+        from .ogb_classic import OGBClassic
+
+        return OGBClassic(catalog_size, capacity, **kw)
+    if kind == "ftpl":
+        from .ftpl import FTPL
+
+        return FTPL(catalog_size, capacity, **kw)
+    raise ValueError(f"unknown policy {kind!r}")

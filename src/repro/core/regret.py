@@ -1,0 +1,96 @@
+"""OPT-in-hindsight and regret accounting (paper Eq. 1).
+
+OPT is the best *static* cache allocation knowing the whole trace: the C most
+requested items; its reward is the total number of requests to them.  We also
+provide the exact *prefix* OPT curve (best static set per prefix, maintained
+incrementally in O(log N) per request via top-C sum maintenance) used for the
+cumulative regret plots (paper Fig 2).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from .treap import make_store
+
+
+def best_static_hits(trace: np.ndarray, C: int) -> int:
+    """Total hits of OPT (top-C items of the whole trace)."""
+    counts = np.bincount(trace)
+    if len(counts) <= C:
+        return int(counts.sum())
+    top = np.partition(counts, len(counts) - C)[len(counts) - C :]
+    return int(top.sum())
+
+
+def best_static_set(trace: np.ndarray, C: int) -> np.ndarray:
+    counts = np.bincount(trace)
+    if len(counts) <= C:
+        return np.arange(len(counts))
+    return np.argpartition(counts, len(counts) - C)[len(counts) - C :]
+
+
+def opt_windowed_hit_ratio(
+    trace: np.ndarray, C: int, window: int
+) -> np.ndarray:
+    """Windowed hit ratio of the whole-trace-OPT static set (paper Fig 7/8)."""
+    opt_set = set(int(i) for i in best_static_set(trace, C))
+    hits = np.fromiter((1 if int(r) in opt_set else 0 for r in trace), dtype=np.int64)
+    n_win = len(trace) // window
+    return hits[: n_win * window].reshape(n_win, window).mean(axis=1)
+
+
+def prefix_opt_hits(trace: np.ndarray, C: int) -> np.ndarray:
+    """h*(t) = max_static-set hits over the prefix r_0..r_{t-1}, for all t.
+
+    h*(t) = sum of the top-C item counts of the prefix.  Maintained online:
+    when count_j increments, the top-C sum changes by 1 if j is (now) in the
+    top-C, else by (count_j+1 > min-of-top) swap.  O(log N) per request.
+    """
+    counts: Dict[int, int] = {}
+    in_top: Dict[int, Tuple[int, int]] = {}  # item -> key in 'top' store
+    top = make_store("sorted")
+    top_sum = 0
+    out = np.empty(len(trace) + 1, dtype=np.int64)
+    out[0] = 0
+    tick = 0
+    for t, j in enumerate(trace):
+        j = int(j)
+        tick += 1
+        c = counts.get(j, 0) + 1
+        counts[j] = c
+        if j in in_top:
+            old = in_top[j]
+            top.remove(old, j)
+            key = (c, tick)
+            top.insert(key, j)
+            in_top[j] = key
+            top_sum += 1
+        elif len(in_top) < C:
+            key = (c, tick)
+            top.insert(key, j)
+            in_top[j] = key
+            top_sum += c
+        else:
+            mk, mi = top.min()
+            if c > mk[0]:
+                top.pop_min()
+                del in_top[mi]
+                top_sum -= mk[0]
+                key = (c, tick)
+                top.insert(key, j)
+                in_top[j] = key
+                top_sum += c
+        out[t + 1] = top_sum
+    return out
+
+
+def regret_curve(policy_cumhits: np.ndarray, trace: np.ndarray, C: int) -> np.ndarray:
+    """R(t) = prefix-OPT(t) - policy(t); sub-linear growth <=> no-regret."""
+    opt = prefix_opt_hits(trace, C)
+    assert len(policy_cumhits) == len(opt) - 1 or len(policy_cumhits) == len(opt)
+    if len(policy_cumhits) == len(opt) - 1:
+        return opt[1:] - policy_cumhits
+    return opt - policy_cumhits

@@ -1,0 +1,117 @@
+"""Batched fractional OGB_cl in pure JAX — the TPU data-plane form.
+
+Per batch of B requests over a catalog of N items (paper Eq. 2 / §5.3):
+
+    counts = histogram(request_ids)           # the summed gradient
+    y      = f + eta * counts                 # ascent step
+    tau    = root of sum(clip(y - tau, 0, 1)) = C     (capped-simplex proj.)
+    f'     = clip(y - tau, 0, 1)
+
+Everything is element-wise over the catalog except the scalar root-find, which
+is K bisection iterations each needing one global sum — this is the structure
+the Pallas kernel (repro.kernels.capped_simplex) fuses and the shard_map
+version (repro.jaxcache.sharded) distributes with one psum per iteration.
+
+`jnp.float32` is sufficient: tau only needs ~1e-7 relative accuracy for the
+sampling decisions downstream (validated against the float64 numpy oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_BISECT_ITERS = 50
+
+
+def request_counts(ids: jax.Array, catalog_size: int) -> jax.Array:
+    """Histogram of request ids — the batch gradient (one-hot sum)."""
+    return jnp.zeros(catalog_size, jnp.float32).at[ids].add(1.0)
+
+
+def capped_simplex_project(
+    y: jax.Array, capacity: float, iters: int = DEFAULT_BISECT_ITERS
+) -> Tuple[jax.Array, jax.Array]:
+    """Bisection projection onto {f in [0,1]^N : sum f = C}. Returns (f, tau)."""
+    lo = jnp.min(y) - 1.0
+    hi = jnp.max(y)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        mass = jnp.sum(jnp.clip(y - mid, 0.0, 1.0))
+        too_much = mass >= capacity
+        return jnp.where(too_much, mid, lo), jnp.where(too_much, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    tau = 0.5 * (lo + hi)
+    return jnp.clip(y - tau, 0.0, 1.0), tau
+
+
+class FractionalState(NamedTuple):
+    """Catalog-wide fractional cache state (the data-plane state)."""
+
+    f: jax.Array  # (N,) float32, in the capped simplex
+    step: jax.Array  # () int32
+
+    @staticmethod
+    def create(catalog_size: int, capacity: int) -> "FractionalState":
+        f0 = jnp.full(catalog_size, capacity / catalog_size, jnp.float32)
+        return FractionalState(f=f0, step=jnp.zeros((), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "iters"))
+def ogb_batch_update(
+    state: FractionalState,
+    request_ids: jax.Array,  # (B,) int32
+    eta: jax.Array,
+    capacity: int,
+    iters: int = DEFAULT_BISECT_ITERS,
+) -> Tuple[FractionalState, jax.Array]:
+    """One batched OGB_cl step. Returns (new_state, fractional_reward).
+
+    Reward is sum_t f[r_t] evaluated at the *pre-update* state (OCO order).
+    """
+    reward = jnp.sum(state.f[request_ids])
+    counts = request_counts(request_ids, state.f.shape[0])
+    y = state.f + eta * counts
+    f_new, _tau = capped_simplex_project(y, float(capacity), iters)
+    return FractionalState(f=f_new, step=state.step + 1), reward
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def poisson_sample(
+    f: jax.Array, p: jax.Array, capacity: int
+) -> jax.Array:
+    """Coordinated Poisson sample: x_i = (f_i >= p_i); E[sum x] = C."""
+    del capacity  # soft constraint: capacity is implied by sum(f)
+    return (f >= p).astype(jnp.bool_)
+
+
+def permanent_random_numbers(key: jax.Array, catalog_size: int) -> jax.Array:
+    """The p_i of §5.1 (drawn once; may be re-drawn periodically)."""
+    return jax.random.uniform(key, (catalog_size,), jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def madow_sample_jax(f: jax.Array, u: jax.Array, capacity: int) -> jax.Array:
+    """Madow systematic sampling in JAX: exactly C items, P(i) = f_i.
+
+    Returns a bool mask. Used by the hard-capacity serving configurations.
+    """
+    cum = jnp.cumsum(f)
+    # item i selected iff some threshold u+k falls in (cum[i-1], cum[i]]
+    lower = jnp.concatenate([jnp.zeros(1, f.dtype), cum[:-1]])
+    # number of thresholds <= x is floor(x - u) + 1 for x >= u
+    n_below = lambda x: jnp.floor(x - u + 1.0)
+    sel = n_below(cum) - n_below(lower)
+    return sel >= 1.0
+
+
+def fractional_hit_ratio(
+    state: FractionalState, request_ids: jax.Array
+) -> jax.Array:
+    return jnp.mean(state.f[request_ids])

@@ -1,0 +1,192 @@
+"""Catalog-sharded OGB across a TPU mesh (shard_map + one psum per iteration).
+
+The fractional cache state ``f`` (catalog of N items) is sharded across every
+mesh axis; request batches are replicated (single logical cache) or sharded
+over ``pod`` with a cross-pod count reduction.  Each bisection iteration of
+the capped-simplex projection needs exactly one scalar ``psum`` — everything
+else is local to the shard, so the step is bandwidth-bound on the catalog
+sweep and scales to catalogs of 10^9+ items across pods.
+
+Also provides the *cache-fleet* form: E independent edge caches sharded over
+the ``data`` axis, each with the catalog sharded over ``model`` — the
+deployment shape for a CDN fleet.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .fractional import DEFAULT_BISECT_ITERS
+
+
+def _local_histogram(
+    ids: jax.Array, shard_size: int, offset: jax.Array
+) -> jax.Array:
+    """Histogram of the ids that fall inside [offset, offset+shard_size)."""
+    local = ids - offset
+    inb = (local >= 0) & (local < shard_size)
+    idx = jnp.where(inb, local, 0)
+    return jnp.zeros(shard_size, jnp.float32).at[idx].add(inb.astype(jnp.float32))
+
+
+def make_sharded_step(
+    mesh: Mesh,
+    catalog_size: int,
+    capacity: int,
+    batch: int,
+    eta: float,
+    iters: int = DEFAULT_BISECT_ITERS,
+    pod_axis: Optional[str] = None,
+):
+    """Build the jitted sharded OGB step for `mesh`.
+
+    Returns (step_fn, f_sharding) where step_fn(f, ids) -> (f', reward).
+    ``f`` is (N,) sharded over every mesh axis; ``ids`` is (B,) replicated
+    (or (B,) globally with pod-sharding when ``pod_axis`` is given).
+    """
+    axes = tuple(mesh.axis_names)
+    n_dev = mesh.size
+    if catalog_size % n_dev:
+        raise ValueError(f"catalog {catalog_size} must divide devices {n_dev}")
+    shard_size = catalog_size // n_dev
+    f_spec = P(axes)  # (N,) sharded over the flattened device grid
+    ids_spec = P(pod_axis) if pod_axis else P()
+    eta_f = jnp.float32(eta)
+    cap = float(capacity)
+
+    def local_step(f_local: jax.Array, ids: jax.Array):
+        if pod_axis is not None:
+            # each pod ingests its own request slice; the catalog range owned
+            # by a device is globally unique, so every device must see every
+            # id — one cheap DCN all-gather of the (B/pods,) int32 ids.
+            ids = jax.lax.all_gather(ids, pod_axis, tiled=True)
+
+        # flattened linear device index = position of this shard in f
+        dev_linear = jnp.zeros((), jnp.int32)
+        stride = 1
+        for ax in reversed(axes):
+            dev_linear = dev_linear + jax.lax.axis_index(ax) * stride
+            stride *= mesh.shape[ax]
+        offset = dev_linear * shard_size
+
+        counts = _local_histogram(ids, shard_size, offset)
+
+        # reward = sum_t f[r_t] at the pre-update state (only in-range ids)
+        local = ids - offset
+        inb = (local >= 0) & (local < shard_size)
+        reward = jnp.sum(
+            jnp.where(inb, f_local[jnp.where(inb, local, 0)], 0.0)
+        )
+        reward = jax.lax.psum(reward, axes)
+
+        y = f_local + eta_f * counts
+
+        lo = jnp.float32(0.0)
+        hi = jnp.float32(1.0) + eta_f * jnp.float32(batch)
+
+        def body(_, carry):
+            lo, hi = carry
+            mid = 0.5 * (lo + hi)
+            mass = jax.lax.psum(jnp.sum(jnp.clip(y - mid, 0.0, 1.0)), axes)
+            too_much = mass >= cap
+            return jnp.where(too_much, mid, lo), jnp.where(too_much, hi, mid)
+
+        lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+        tau = 0.5 * (lo + hi)
+        return jnp.clip(y - tau, 0.0, 1.0), reward
+
+    shard_fn = jax.shard_map(
+        local_step,
+        mesh=mesh,
+        in_specs=(f_spec, ids_spec),
+        out_specs=(f_spec, P()),
+    )
+    step = jax.jit(shard_fn)
+    f_sharding = NamedSharding(mesh, f_spec)
+    return step, f_sharding
+
+
+def make_fleet_step(
+    mesh: Mesh,
+    n_caches: int,
+    catalog_size: int,
+    capacity: int,
+    batch: int,
+    eta: float,
+    iters: int = DEFAULT_BISECT_ITERS,
+    cache_axis: str = "data",
+    catalog_axis: str = "model",
+):
+    """E independent edge caches: f (E, N), ids (E, B). Per-cache projection.
+
+    Caches shard over ``cache_axis``; the catalog dimension shards over
+    ``catalog_axis``; the bisection psum reduces over the catalog axis only,
+    so caches never synchronize with each other (embarrassingly parallel
+    across the fleet, as a real CDN deployment would be).
+    """
+    if n_caches % mesh.shape[cache_axis]:
+        raise ValueError("n_caches must divide the cache axis")
+    if catalog_size % mesh.shape[catalog_axis]:
+        raise ValueError("catalog must divide the catalog axis")
+    shard_n = catalog_size // mesh.shape[catalog_axis]
+    eta_f = jnp.float32(eta)
+    cap = float(capacity)
+
+    def local_step(f_local: jax.Array, ids_local: jax.Array):
+        # f_local: (E_loc, N_loc); ids_local: (E_loc, B)
+        offset = jax.lax.axis_index(catalog_axis) * shard_n
+
+        def counts_and_reward(f_c, ids_c):
+            local = ids_c - offset
+            inb = (local >= 0) & (local < shard_n)
+            idx = jnp.where(inb, local, 0)
+            counts = jnp.zeros(shard_n, jnp.float32).at[idx].add(
+                inb.astype(jnp.float32)
+            )
+            reward_part = jnp.sum(jnp.where(inb, f_c[idx], 0.0))
+            return counts, reward_part
+
+        counts, reward_part = jax.vmap(counts_and_reward)(f_local, ids_local)
+        reward = jax.lax.psum(reward_part, catalog_axis)  # (E_loc,)
+
+        y = f_local + eta_f * counts  # (E_loc, N_loc)
+        e_loc = y.shape[0]
+        lo = jnp.zeros((e_loc,), jnp.float32)
+        hi = jnp.full((e_loc,), 1.0, jnp.float32) + eta_f * jnp.float32(
+            ids_local.shape[1]
+        )
+        # mark the carries as varying over the cache axis (their updates
+        # depend on f, which is sharded over it)
+        lo = jax.lax.pvary(lo, (cache_axis,))
+        hi = jax.lax.pvary(hi, (cache_axis,))
+
+        def body(_, carry):
+            lo, hi = carry
+            mid = 0.5 * (lo + hi)
+            mass = jax.lax.psum(
+                jnp.sum(jnp.clip(y - mid[:, None], 0.0, 1.0), axis=1),
+                catalog_axis,
+            )
+            pred = mass >= cap
+            return jnp.where(pred, mid, lo), jnp.where(pred, hi, mid)
+
+        lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+        tau = 0.5 * (lo + hi)
+        return jnp.clip(y - tau[:, None], 0.0, 1.0), reward
+
+    f_spec = P(cache_axis, catalog_axis)
+    ids_spec = P(cache_axis, None)
+    shard_fn = jax.shard_map(
+        local_step,
+        mesh=mesh,
+        in_specs=(f_spec, ids_spec),
+        out_specs=(f_spec, P(cache_axis)),
+    )
+    step = jax.jit(shard_fn)
+    return step, NamedSharding(mesh, f_spec), NamedSharding(mesh, ids_spec)

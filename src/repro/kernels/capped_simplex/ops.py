@@ -1,0 +1,70 @@
+"""jit'd public wrapper for the fused capped-simplex OGB update."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BLOCK_ROWS, DEFAULT_K, LANES, _grid_apply, _grid_masses
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("eta", "capacity", "passes", "k", "block_rows", "interpret"),
+)
+def fused_ogb_update(
+    f: jax.Array,
+    counts: jax.Array,
+    eta: float,
+    capacity: float,
+    passes: int = 3,
+    k: int = DEFAULT_K,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """f' = Proj_F(f + eta * counts) via K-way bracketing Pallas kernels.
+
+    ``passes`` sweeps of the K-candidate mass kernel narrow tau to a bracket
+    of width (hi-lo)/(K-1)^passes, then a piecewise-linear interpolation
+    (exact when the final bracket contains no clip breakpoint) produces tau.
+
+    Memory traffic: (passes+1) catalog sweeps instead of ~50 for plain
+    bisection — the headline Pallas win for this memory-bound op.
+    """
+    n = f.shape[0]
+    dtype = f.dtype
+    block = block_rows * LANES
+    pad = (-n) % block
+    f2 = jnp.pad(f, (0, pad)).reshape(-1, LANES)
+    c2 = jnp.pad(counts, (0, pad)).reshape(-1, LANES)
+
+    lo = jnp.zeros((), jnp.float32)
+    hi = (1.0 + eta * jnp.sum(counts)).astype(jnp.float32)
+    cap = jnp.float32(capacity)
+
+    g_lo = None
+    cnt_lo = None
+    for _ in range(passes):
+        # K candidates spanning [lo, hi] inclusive
+        frac = jnp.arange(k, dtype=jnp.float32) / (k - 1)
+        taus = lo + (hi - lo) * frac
+        mass, cnt = _grid_masses(f2, c2, taus, eta, block_rows, interpret)
+        # last index with mass >= C  (mass is non-increasing in tau)
+        ge = mass >= cap
+        idx = jnp.maximum(jnp.sum(ge.astype(jnp.int32)) - 1, 0)
+        lo = taus[idx]
+        hi = taus[jnp.minimum(idx + 1, k - 1)]
+        g_lo = mass[idx]
+        cnt_lo = cnt[idx]
+
+    # piecewise-linear interpolation inside the final bracket:
+    # g(tau) = g(lo) - cnt_lo * (tau - lo)  while no breakpoint is crossed
+    tau_interp = lo + (g_lo - cap) / jnp.maximum(cnt_lo, 1.0)
+    tau = jnp.where(
+        cnt_lo > 0, jnp.clip(tau_interp, lo, hi), 0.5 * (lo + hi)
+    ).astype(jnp.float32)
+
+    out2 = _grid_apply(f2, c2, tau, eta, block_rows, interpret)
+    return out2.reshape(-1)[:n].astype(dtype)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused OGB capped-simplex update.
+
+semantics(f, counts, eta, C):
+    y   = f + eta * counts
+    tau = root of  sum(clip(y - tau, 0, 1)) = C      (tau >= 0 in OGB: mass
+          was added, never removed, so the projection only subtracts)
+    out = clip(y - tau, 0, 1)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_ogb_update_ref(
+    f: jax.Array, counts: jax.Array, eta: float, capacity: float, iters: int = 64
+) -> jax.Array:
+    y = f + jnp.asarray(eta, f.dtype) * counts
+    lo = jnp.zeros((), jnp.float32)
+    hi = (1.0 + eta * jnp.sum(counts)).astype(jnp.float32)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        mass = jnp.sum(jnp.clip(y.astype(jnp.float32) - mid, 0.0, 1.0))
+        pred = mass >= capacity
+        return jnp.where(pred, mid, lo), jnp.where(pred, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    tau = (0.5 * (lo + hi)).astype(f.dtype)
+    return jnp.clip(y - tau, 0.0, 1.0)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for GQA flash-decode attention (single new token)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, H, D)
+    k: jax.Array,  # (B, S, Hkv, D)
+    v: jax.Array,  # (B, S, Hkv, D)
+    lengths: jax.Array,  # (B,) int32 valid KV lengths
+) -> jax.Array:
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(D))
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # scores: (B, Hkv, group, S)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qf, kf) * scale
+    mask = jnp.arange(S)[None, :] < lengths[:, None]  # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", w, vf)
+    return out.reshape(B, H, D).astype(q.dtype)

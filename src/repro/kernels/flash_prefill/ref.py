@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for causal GQA prefill attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_prefill_ref(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, Hkv, D)
+    v: jax.Array,  # (B, S, Hkv, D)
+) -> jax.Array:
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(D))
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=2)  # kv head h//g convention
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf) * scale
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vf)
+    return out.astype(q.dtype)

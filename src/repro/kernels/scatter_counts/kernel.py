@@ -1,0 +1,65 @@
+"""Pallas TPU histogram kernel (request-id -> dense counts).
+
+TPU has no fast generic scatter; the idiomatic replacement at serving scale is
+a compare-and-reduce over catalog blocks (equivalently a ones @ one-hot MXU
+matmul): for each catalog block resident in VMEM, compare the id vector
+against the block's position iota and reduce over the batch dimension.
+
+Work is O(B * N / lanes) — the right trade at serving scale (B <= 4k ids,
+page catalogs <= ~1M per shard), where it fuses with the projection update and
+avoids XLA's sort-based scatter path.  For huge catalogs the jnp scatter
+(repro.jaxcache.fractional.request_counts) is used instead; the crossover is
+recorded in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEFAULT_BLOCK_ROWS = 8  # 8*128 = 1024 catalog slots per block
+DEFAULT_ID_CHUNK = 256
+
+
+def histogram_kernel(ids_ref, out_ref, *, block_rows: int, id_chunk: int):
+    i = pl.program_id(0)
+    offset = i * block_rows * LANES
+    pos = offset + jax.lax.broadcasted_iota(
+        jnp.int32, (block_rows, LANES), 0
+    ) * LANES + jax.lax.broadcasted_iota(jnp.int32, (block_rows, LANES), 1)
+
+    ids = ids_ref[...]  # (B_pad,)
+    n_chunks = ids.shape[0] // id_chunk
+
+    def body(c, acc):
+        chunk = jax.lax.dynamic_slice(ids, (c * id_chunk,), (id_chunk,))
+        eq = chunk[:, None, None] == pos[None, :, :]  # (chunk, rows, lanes)
+        return acc + jnp.sum(eq.astype(jnp.float32), axis=0)
+
+    acc = jax.lax.fori_loop(
+        0, n_chunks, body, jnp.zeros((block_rows, LANES), jnp.float32)
+    )
+    out_ref[...] = acc
+
+
+def _grid_histogram(
+    ids: jax.Array,
+    n_blocks: int,
+    block_rows: int,
+    id_chunk: int,
+    interpret: bool,
+):
+    return pl.pallas_call(
+        functools.partial(
+            histogram_kernel, block_rows=block_rows, id_chunk=id_chunk
+        ),
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((ids.shape[0],), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks * block_rows, LANES), jnp.float32),
+        interpret=interpret,
+    )(ids)

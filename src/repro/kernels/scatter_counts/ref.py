@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the request-histogram kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scatter_counts_ref(ids: jax.Array, catalog_size: int) -> jax.Array:
+    """counts[i] = #{t : ids[t] == i}; ids < 0 are padding and ignored."""
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    return jnp.zeros(catalog_size, jnp.float32).at[safe].add(
+        valid.astype(jnp.float32)
+    )

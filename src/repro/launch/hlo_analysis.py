@@ -1,0 +1,173 @@
+"""Trip-count-aware HLO analysis.
+
+XLA's HloCostAnalysis (and a naive grep of the HLO text) counts the body of a
+``while`` loop ONCE, but jax.lax.scan-based layer stacks execute the body L
+times — so collective bytes parsed naively from the optimized module
+under-count by the trip count (61x for kimi-k2!).  This module parses the
+optimized HLO text into computations, recovers each while loop's trip count
+from its condition (``compare(iter, constant)`` pattern), and multiplies the
+collective bytes found in (transitively) called computations by the product
+of enclosing trip counts.
+
+This is the collective-bytes source for EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2, "u16": 2,
+    "f8e4m3": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALL_TARGETS = re.compile(
+    r"(?:condition|body|to_apply|branch_computations|called_computations|calls)="
+    r"[{]?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)[}]?"
+)
+_WHILE = re.compile(r"while\(.*?\).*?condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_CONST_DEF = re.compile(r"%?([\w\.\-]+)\s*=\s*s\d+\[\]\s*constant\((\d+)\)")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> its instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HEADER.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+        else:
+            if stripped == "}" or stripped.startswith("} "):
+                cur = None
+            else:
+                comps[cur].append(stripped)
+    return comps
+
+
+def scalar_int_constants(hlo: str) -> Dict[str, int]:
+    """Global table: %name = s32[] constant(N)."""
+    out: Dict[str, int] = {}
+    for m in _CONST_DEF.finditer(hlo):
+        out[m.group(1)] = int(m.group(2))
+    return out
+
+
+def while_trip_count(
+    cond_lines: List[str], const_table: Dict[str, int]
+) -> Optional[int]:
+    """Extract N from the canonical `i < N` while condition.
+
+    The bound is either an inline `constant(N)` in the condition computation
+    or a named scalar constant referenced by the compare/fusion — resolve both
+    and take the max (the induction start, usually 0, is also a constant)."""
+    consts: List[int] = []
+    for ln in cond_lines:
+        consts += [int(v) for v in _CONST_INT.findall(ln)]
+        if "compare" in ln or "fusion" in ln:
+            for name in _OPERANDS.findall(ln):
+                if name in const_table:
+                    consts.append(const_table[name])
+    consts = [c for c in consts if c > 0]
+    return max(consts) if consts else None
+
+
+def analyze_collectives(hlo: str) -> Dict[str, float]:
+    """Collective kind -> total bytes, trip-count corrected."""
+    comps = split_computations(hlo)
+    const_table = scalar_int_constants(hlo)
+
+    # map: computation -> list of (callee, multiplier)
+    calls: Dict[str, List[Tuple[str, int]]] = {name: [] for name in comps}
+    for name, lines in comps.items():
+        for ln in lines:
+            wm = _WHILE.search(ln)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trip = while_trip_count(comps.get(cond, []), const_table) or 1
+                calls[name].append((body, max(trip, 1)))
+                continue
+            cm = _CALL_TARGETS.search(ln)
+            if cm and "while(" not in ln:
+                for callee in re.split(r",\s*", cm.group(1)):
+                    callee = callee.lstrip("%")
+                    if callee in comps:
+                        calls[name].append((callee, 1))
+
+    # multiplier of each computation = sum over call paths from entry
+    entry = None
+    for name in comps:
+        if "entry" in name.lower() or name.startswith("main"):
+            entry = name
+            break
+    if entry is None:
+        entry = next(iter(comps))
+
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+
+    def visit(name: str, m: float, depth: int = 0):
+        if depth > 64:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for callee, k in calls.get(name, []):
+            visit(callee, m * k, depth + 1)
+
+    visit(entry, 1.0)
+
+    out: Dict[str, float] = {}
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        for ln in lines:
+            for kind in COLLECTIVES:
+                if re.search(rf"\b{kind}(?:-start)?\(", ln):
+                    # output shape(s) are on the lhs of '='
+                    lhs = ln.split("=", 1)[0]
+                    b = _shape_bytes(lhs)
+                    if b == 0:  # fall back to whole line minus operands
+                        b = _shape_bytes(ln.split("(", 1)[0])
+                    out[kind] = out.get(kind, 0.0) + b * m
+                    break
+    return out
+
+
+def analyze_flops_undercount(hlo: str) -> Dict[str, float]:
+    """Report the total while multiplier mass — a diagnostic for how much
+    cost_analysis undercounts loop bodies in this module."""
+    comps = split_computations(hlo)
+    n_while = sum(
+        1 for lines in comps.values() for ln in lines if "while(" in ln
+    )
+    return {"n_computations": len(comps), "n_while": n_while}

@@ -1,0 +1,82 @@
+"""Shared model components: norms, RoPE, embeddings, initializers, loss."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[
+        name
+    ]
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
+    s = scale if scale is not None else (1.0 / jnp.sqrt(in_dim))
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * s).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+def rmsnorm_init(dim: int, dtype):
+    return jnp.ones((dim,), dtype)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w.astype(x.dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(
+    x: jax.Array,  # (..., S, H, D)
+    positions: jax.Array,  # (..., S)
+    theta: float,
+) -> jax.Array:
+    if theta <= 0:
+        return x
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x2 * cos + x1 * sin
+    return jnp.concatenate([rx1, rx2], axis=-1).astype(x.dtype)
+
+
+def softmax_cross_entropy(
+    logits: jax.Array,  # (B, S, V) — may be sharded on V
+    labels: jax.Array,  # (B, S) int32
+    mask: Optional[jax.Array] = None,  # (B, S) 1=count
+    z_loss: float = 1e-4,
+) -> Tuple[jax.Array, jax.Array]:
+    """Mean next-token loss (+ z-loss for logit drift control at scale)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss > 0:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is None:
+        return jnp.mean(nll), jnp.mean(lse)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom, jnp.sum(lse * mask) / denom
+
+
+def shift_tokens(x: jax.Array) -> jax.Array:
+    """x_{t-1} with zero at t=0 (token-shift used by RWKV)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]

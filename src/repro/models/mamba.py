@@ -1,0 +1,91 @@
+"""Mamba (selective SSM) block — the non-attention layer of Jamba.
+
+h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t ;  y_t = C_t . h_t + D x_t
+with input-dependent (dt, B, C) and a causal depthwise conv front.  Training
+scans over time; decoding carries (conv window, h) as O(1) state.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+
+from .common import dense_init
+
+
+def init_mamba(key, cfg, dtype) -> Dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], d, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, d_in), jnp.float32) * 0.1).astype(dtype),
+        "w_bc": dense_init(ks[2], d_in, 2 * n, dtype),
+        "w_dt": dense_init(ks[3], d_in, d_in, dtype, scale=0.01),
+        "dt_bias": jnp.zeros((d_in,), jnp.float32),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (d_in, n))
+        ),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "w_out": dense_init(ks[4], d_in, d, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state=None):
+    """Depthwise causal conv; x (B, S, C), w (W, C). Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state  # (B, W-1, C)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(W))
+    return y, xp[:, -(W - 1) :, :]
+
+
+def mamba_forward(
+    p: Dict, x: jax.Array, cfg, state: Tuple = None
+) -> Tuple[jax.Array, Tuple]:
+    """x: (B, S, D); state=(conv_state, h) for decode, None for training."""
+    B, S, D = x.shape
+    n = cfg.ssm_state_dim
+    xz = x @ p["w_in"]
+    xin, z = jnp.split(xz, 2, axis=-1)  # (B, S, d_in) each
+    xin = shard(xin, "batch", None, "ff")
+    conv_state = None if state is None else state[0]
+    xin, conv_state_new = _causal_conv(xin, p["conv_w"], conv_state)
+    xin = jax.nn.silu(xin)
+
+    bc = xin @ p["w_bc"]
+    Bmat, Cmat = jnp.split(bc.astype(jnp.float32), 2, axis=-1)  # (B,S,n)
+    dt = jax.nn.softplus((xin @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])  # (d_in, n)
+
+    xin_f = xin.astype(jnp.float32)
+    decay = jnp.exp(dt[..., None] * A[None, None])  # (B,S,d_in,n)
+    drive = (dt * xin_f)[..., None] * Bmat[:, :, None, :]  # (B,S,d_in,n)
+
+    h0 = (
+        jnp.zeros((B, xin.shape[-1], n), jnp.float32) if state is None else state[1]
+    )
+
+    def step(h, inp):
+        dec, drv, c = inp  # (B,d_in,n), (B,d_in,n), (B,n)
+        h_new = dec * h + drv
+        y = jnp.einsum("bdn,bn->bd", h_new, c)
+        return h_new, y
+
+    decs = jnp.moveaxis(decay, 1, 0)
+    drvs = jnp.moveaxis(drive, 1, 0)
+    cs = jnp.moveaxis(Cmat, 1, 0)
+    h_final, ys = jax.lax.scan(step, h0, (decs, drvs, cs))
+    y = jnp.moveaxis(ys, 0, 1)  # (B,S,d_in)
+    y = y + p["D"] * xin_f
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    return shard(out, "batch", None, None), (conv_state_new, h_final)

@@ -1,0 +1,39 @@
+"""Dense MLP blocks: SwiGLU / GeGLU / plain-GELU."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+
+from .common import dense_init
+
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str, dtype) -> Dict:
+    ks = jax.random.split(key, 3)
+    if activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+            "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+            "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+        }
+    if activation == "gelu":
+        return {
+            "w_up": dense_init(ks[0], d_model, d_ff, dtype),
+            "w_down": dense_init(ks[1], d_ff, d_model, dtype),
+        }
+    raise ValueError(f"unknown activation {activation}")
+
+
+def mlp_forward(p: Dict, x: jax.Array, activation: str) -> jax.Array:
+    if activation in ("swiglu", "geglu"):
+        act = jax.nn.silu if activation == "swiglu" else jax.nn.gelu
+        h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+        h = shard(h, "batch", None, "ff")
+        return h @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"])
+    h = shard(h, "batch", None, "ff")
+    return h @ p["w_down"]

@@ -1,0 +1,175 @@
+"""Mixture-of-Experts layer: top-k routing, capacity buckets, EP sharding.
+
+Production-style dispatch (no dense one-hot (T, E, Cap) tensor):
+
+  1. router logits -> top-k (gates, expert ids) per token
+  2. sort the (T*k,) assignment list by expert; rank-in-expert via the sorted
+     segment offsets (O(Tk log Tk), no (Tk x E) buffer)
+  3. scatter tokens into an (E, capacity, D) buffer (dropped beyond capacity)
+  4. per-expert SwiGLU via batched einsum, experts sharded over "model" (EP)
+  5. gather back + combine with gates
+
+Aux losses: switch-style load-balance + router z-loss, returned to the caller.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+
+from .common import dense_init
+
+
+def init_moe(key, cfg, dtype) -> Dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.expert_ff
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / jnp.sqrt(d)
+    return {
+        "router": dense_init(ks[0], d, e, jnp.float32),  # router kept fp32
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale).astype(dtype),
+        "w_down": (
+            jax.random.normal(ks[3], (e, f, d), jnp.float32) * (1.0 / jnp.sqrt(f))
+        ).astype(dtype),
+    }
+
+
+def moe_forward(
+    p: Dict, x: jax.Array, cfg
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, D) -> (B, S, D), aux {load_balance_loss, router_z_loss}."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32)) @ p["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, K)  # (T, K)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    # --- aux losses ---
+    me = jnp.mean(probs, axis=0)  # mean router prob per expert
+    # fraction of tokens routed per expert (scatter-add; no (T,K,E) one-hot)
+    ce = (
+        jnp.zeros(E, jnp.float32).at[eidx.reshape(-1)].add(1.0) / (T * K)
+    )
+    aux = {
+        "load_balance_loss": E * jnp.sum(me * ce),
+        "router_z_loss": jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))),
+    }
+
+    # §Perf H2'': for SMALL experts (granite: E*F = 16k), dispatch/combine
+    # communication dwarfs the matmuls — evaluate the mixture DENSELY (every
+    # expert on every token, weighted by the top-k gates).  ~E/K overcompute
+    # but zero dispatch collectives; profitable whenever E*F is below a dense
+    # d_ff-equivalent threshold.  (The first H2' attempt — capacity sharded
+    # over data — was REFUTED: GSPMD cannot prove scatter locality and
+    # replicates + all-reduces the buffer; see EXPERIMENTS.md §Perf.)
+    if E * cfg.expert_ff <= 32_768:
+        gates_full = jnp.zeros((T, E), jnp.float32).at[
+            jnp.arange(T)[:, None], eidx
+        ].set(gates)
+        xe = xt.astype(x.dtype)
+        hd = jax.nn.silu(jnp.einsum("td,edf->tef", xe, p["w_gate"])) * jnp.einsum(
+            "td,edf->tef", xe, p["w_up"]
+        )
+        hd = hd * gates_full.astype(x.dtype)[:, :, None]
+        out = jnp.einsum("tef,efd->td", hd, p["w_down"]).reshape(B, S, D)
+        return shard(out, "batch", None, None), aux
+
+    # Perf H2''': per-data-shard capacity slicing.  Tokens are reshaped to
+    # (dp, T/dp, D) with dp = the batch-sharding degree, so the dispatch
+    # buffer (dp, E, cap', D) carries an explicit leading dim that GSPMD can
+    # align with the token sharding -- the scatter/gather become LOCAL per
+    # data shard and the only MoE communication left is the EP/ZeRO-3 weight
+    # movement.  (Replicated-buffer variants generate (E, cap, D)-sized
+    # all-reduces per layer: 15.8 GiB x 61 layers on kimi -- measured, see
+    # EXPERIMENTS.md Perf.  Annotating h/out with F~data was refuted twice:
+    # 14+ TiB/step of all-reduce.)  Capacity is enforced per shard, as in
+    # production EP systems.
+    # Perf H5: the optimal MoE comm strategy is SHAPE-DEPENDENT.  At small
+    # token counts (decode / tiny prefill) the dispatch buffer is tiny, so
+    # within-expert TP over "data" with an activation psum (refuted at train
+    # scale, where cap is huge) beats ZeRO-3 weight gathers by ~100x:
+    # kimi decode psum = (24, 3, 7168) x 61 layers = 63 MB vs 260 GB of
+    # per-layer expert-weight all-gathers.
+    small_batch = T * K <= 16_384
+    dp = 1 if small_batch else _batch_sharding_degree()
+    while dp > 1 and T % dp:
+        dp //= 2
+    tp = T // dp
+    capacity = int(max(1, round(tp * K / E * cfg.capacity_factor)))
+
+    def one_slice(x_s, gates_s, eidx_s):
+        # x_s: (tp, D); gates_s/eidx_s: (tp, K)
+        flat_e = eidx_s.reshape(-1)
+        flat_gate = gates_s.reshape(-1)
+        flat_tok = jnp.arange(tp * K) // K
+        order = jnp.argsort(flat_e)
+        sorted_e = flat_e[order]
+        seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))
+        rank_sorted = jnp.arange(tp * K) - seg_start[sorted_e]
+        keep_sorted = rank_sorted < capacity
+        rows = jnp.where(keep_sorted, sorted_e, 0)
+        cols = jnp.where(keep_sorted, rank_sorted, 0)
+        vals = x_s[flat_tok[order]] * keep_sorted[:, None].astype(x_s.dtype)
+        buf = jnp.zeros((E, capacity, D), x_s.dtype).at[rows, cols].add(vals)
+        inv = jnp.argsort(order)
+        rank_flat = rank_sorted[inv]
+        keep_flat = keep_sorted[inv]
+        return buf, (flat_e, rank_flat, keep_flat, flat_gate)
+
+    xs = xt.reshape(dp, tp, D)
+    buf, meta = jax.vmap(one_slice)(
+        xs, gates.reshape(dp, tp, K), eidx.reshape(dp, tp, K)
+    )
+    batch_ax = None if small_batch else "batch"
+    buf = shard(buf, batch_ax, "experts", None, None)
+
+    # per-expert SwiGLU (experts sharded over "model"; under FSDP the
+    # F-sharded weights are ZeRO-3-gathered -- the storage price at 1T scale)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["w_gate"])) * jnp.einsum(
+        "becd,edf->becf", buf, p["w_up"]
+    )
+    if small_batch:
+        # within-expert TP: hidden dim follows the F~data weight layout; the
+        # down-projection emits a tiny (dp, E, cap, D) psum instead of
+        # gathering the expert weights
+        h = shard(h, None, "experts", None, "fsdp")
+    else:
+        h = shard(h, "batch", "experts", None, None)
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    out_buf = shard(out_buf, batch_ax, "experts", None, None)
+
+    def combine_slice(out_b, meta_s):
+        flat_e, rank_flat, keep_flat, flat_gate = meta_s
+        slot = out_b[flat_e, jnp.minimum(rank_flat, capacity - 1)]
+        slot = slot * keep_flat[:, None].astype(slot.dtype)
+        comb = (slot * flat_gate[:, None].astype(slot.dtype)).reshape(tp, K, D)
+        return jnp.sum(comb, axis=1)
+
+    out = jax.vmap(combine_slice)(out_buf, meta).reshape(T, D)
+    out = out.reshape(B, S, D)
+    return shard(out, "batch", None, None), aux
+
+
+def _batch_sharding_degree() -> int:
+    """Product of mesh axes the 'batch' logical axis maps to (1 off-mesh)."""
+    from repro.dist.sharding import current_mesh, current_rules
+
+    mesh, rules = current_mesh(), current_rules()
+    if mesh is None or rules is None:
+        return 1
+    mapped = rules.rules.get("batch")
+    if mapped is None:
+        return 1
+    axes = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+    deg = 1
+    for a in axes:
+        deg *= mesh.shape.get(a, 1)
+    return deg

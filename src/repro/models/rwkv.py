@@ -1,0 +1,148 @@
+"""RWKV-6 ("Finch") — attention-free token mixing with data-dependent decay.
+
+Per head (head dim n): state S in R^{n x n};  for each step t:
+
+    a_t = k_t (outer) v_t
+    y_t = r_t @ (S_{t-1} + diag(u) a_t)
+    S_t = diag(w_t) S_{t-1} + a_t
+
+with the *data-dependent* per-channel decay  w_t = exp(-exp(w0 + lora(x_t)))
+(the Finch contribution vs RWKV-5's static decay).  Training uses a
+lax.scan over time; decoding carries (shift-token, S) as O(1) state — there is
+no KV cache, which is why the long_500k shape runs on this family.
+
+Channel mixing is the standard RWKV squared-ReLU gated MLP with token shift.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+
+from .common import dense_init, rmsnorm, rmsnorm_init, shift_tokens
+
+_LORA_RANK = 64
+
+
+def init_rwkv_block(key, cfg, dtype) -> Dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    n_heads = d // hd
+    ks = jax.random.split(key, 12)
+    return {
+        "ln1": rmsnorm_init(d, dtype),
+        "ln2": rmsnorm_init(d, dtype),
+        # time mix
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "w_r": dense_init(ks[0], d, d, dtype),
+        "w_k": dense_init(ks[1], d, d, dtype),
+        "w_v": dense_init(ks[2], d, d, dtype),
+        "w_g": dense_init(ks[3], d, d, dtype),
+        "w_o": dense_init(ks[4], d, d, dtype),
+        "w0": (jax.random.normal(ks[5], (d,), jnp.float32) * 0.1 - 6.0).astype(
+            jnp.float32
+        ),
+        "w_lora_a": dense_init(ks[6], d, _LORA_RANK, dtype),
+        "w_lora_b": dense_init(ks[7], _LORA_RANK, d, dtype, scale=0.01),
+        "u": (jax.random.normal(ks[8], (n_heads, hd), jnp.float32) * 0.1).astype(
+            jnp.float32
+        ),
+        "ln_x": rmsnorm_init(d, dtype),
+        # channel mix
+        "mu_ck": jnp.full((d,), 0.5, dtype),
+        "mu_cr": jnp.full((d,), 0.5, dtype),
+        "w_ck": dense_init(ks[9], d, cfg.d_ff, dtype),
+        "w_cv": dense_init(ks[10], cfg.d_ff, d, dtype),
+        "w_cr": dense_init(ks[11], d, d, dtype),
+    }
+
+
+def _decay(p, xw: jax.Array) -> jax.Array:
+    """Data-dependent decay w_t in (0,1): exp(-exp(w0 + lora(x)))."""
+    lora = jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    return jnp.exp(-jnp.exp(p["w0"] + lora.astype(jnp.float32)))
+
+
+def _wkv_scan(r, k, v, w, u, state0):
+    """r,k,v,w: (B, S, H, n); u: (H, n); state0: (B, H, n, n)."""
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # (B, H, n)
+        a = jnp.einsum("bhi,bhj->bhij", k_t, v_t)  # (B,H,n,n)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[None, :, :, None] * a)
+        S_new = w_t[..., None] * S + a
+        return S_new, y
+
+    rs, ks_, vs, ws = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state0, (rs, ks_, vs, ws))
+    return jnp.moveaxis(ys, 0, 1), state  # (B,S,H,n), final state
+
+
+def rwkv_time_mix(
+    p: Dict, x: jax.Array, cfg, state: Tuple = None
+) -> Tuple[jax.Array, Tuple]:
+    """x: (B, S, D). state=(last_x, S) for decode; None for training."""
+    B, S, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    if state is None:
+        x_prev = shift_tokens(x)
+        S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    else:
+        last_x, S0 = state
+        x_prev = jnp.concatenate([last_x[:, None, :], x[:, :-1, :]], axis=1)
+
+    def lerp(mu):
+        return x * mu + x_prev * (1 - mu)
+
+    r = (lerp(p["mu_r"]) @ p["w_r"]).reshape(B, S, H, hd).astype(jnp.float32)
+    k = (lerp(p["mu_k"]) @ p["w_k"]).reshape(B, S, H, hd).astype(jnp.float32)
+    v = (lerp(p["mu_v"]) @ p["w_v"]).reshape(B, S, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(lerp(p["mu_g"]) @ p["w_g"])
+    w = _decay(p, lerp(p["mu_w"])).reshape(B, S, H, hd)
+
+    y, S_final = _wkv_scan(r, k, v, w, p["u"], S0)
+    y = y.reshape(B, S, D).astype(x.dtype)
+    y = rmsnorm(y, p["ln_x"]) * g
+    out = y @ p["w_o"]
+    return shard(out, "batch", None, None), (x[:, -1, :], S_final)
+
+
+def rwkv_channel_mix(
+    p: Dict, x: jax.Array, state: jax.Array = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Squared-ReLU gated channel mixing with token shift."""
+    if state is None:
+        x_prev = shift_tokens(x)
+    else:
+        x_prev = jnp.concatenate([state[:, None, :], x[:, :-1, :]], axis=1)
+    xk = x * p["mu_ck"] + x_prev * (1 - p["mu_ck"])
+    xr = x * p["mu_cr"] + x_prev * (1 - p["mu_cr"])
+    k = jnp.square(jax.nn.relu(xk @ p["w_ck"]))
+    k = shard(k, "batch", None, "ff")
+    out = jax.nn.sigmoid(xr @ p["w_cr"]) * (k @ p["w_cv"])
+    return out, x[:, -1, :]
+
+
+def rwkv_block_fwd(p, x, cfg, state=None):
+    """Full RWKV block (pre-norm time-mix + pre-norm channel-mix).
+
+    state = (tm_x, tm_s, cm_x) or None (training). Returns (x, new_state).
+    """
+    from .common import rmsnorm as _rms
+
+    tm_state = None if state is None else (state[0], state[1])
+    h, (tm_x, tm_s) = rwkv_time_mix(p, _rms(x, p["ln1"]), cfg, state=tm_state)
+    x = x + h
+    cm_state = None if state is None else state[2]
+    h2, cm_x = rwkv_channel_mix(p, _rms(x, p["ln2"]), state=cm_state)
+    x = x + h2
+    return x, (tm_x, tm_s, cm_x)

@@ -1,0 +1,138 @@
+"""Fault-tolerant checkpointing: atomic, async, resumable.
+
+Layout:
+    <dir>/step_<n>/arrays.npz     flattened pytree leaves
+    <dir>/step_<n>/meta.json      treedef + extra state (data cursor, OGB cache)
+    <dir>/LATEST                  pointer file (written last -> atomic commit)
+
+Crash-safety: a checkpoint directory is written under a temp name and renamed
+(rename is atomic on POSIX); LATEST is updated only after the rename, so a
+crash mid-write can never corrupt the restore path.  An async writer thread
+overlaps serialization with training (block only on the previous write).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(
+    directory: str, step: int, tree: Any, extra: Optional[Dict] = None
+) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, treedef = _flatten(tree)
+    np.savez(
+        os.path.join(tmp, "arrays.npz"),
+        **{f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)},
+    )
+    meta = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "treedef": str(treedef),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
+        f.write(os.path.basename(final))
+    os.replace(
+        os.path.join(directory, "LATEST.tmp"), os.path.join(directory, "LATEST")
+    )
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    try:
+        with open(os.path.join(directory, "LATEST")) as f:
+            name = f.read().strip()
+        return int(name.split("_")[-1])
+    except (FileNotFoundError, ValueError):
+        return None
+
+
+def restore_checkpoint(
+    directory: str, tree_like: Any, step: Optional[int] = None
+) -> Tuple[Any, int, Dict]:
+    """Restore into the structure of `tree_like`. Returns (tree, step, extra)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves_like, treedef = _flatten(tree_like)
+    n = meta["n_leaves"]
+    if n != len(leaves_like):
+        raise ValueError(f"checkpoint has {n} leaves, expected {len(leaves_like)}")
+    leaves = []
+    for i, like in enumerate(leaves_like):
+        arr = data[f"leaf_{i}"]
+        leaves.append(jax.numpy.asarray(arr, dtype=like.dtype))
+    return jax.tree.unflatten(treedef, leaves), step, meta.get("extra", {})
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint writes with training; keep_last pruning included."""
+
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.directory = directory
+        self.keep_last = keep_last
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> None:
+        self.wait()  # one write in flight at a time
+        # snapshot to host memory synchronously (cheap), write async
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def _write():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra)
+                self._prune()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def _prune(self) -> None:
+        steps = sorted(
+            int(d.split("_")[-1])
+            for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        for s in steps[: -self.keep_last]:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True
+            )

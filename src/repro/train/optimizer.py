@@ -1,0 +1,98 @@
+"""AdamW with dtype-configurable moments, global-norm clipping, cosine schedule.
+
+Implemented from scratch (no optax dependency in this environment).  Moment
+dtype matters at the 1T scale: bf16 moments halve optimizer HBM (the knob that
+lets kimi-k2 train_4k fit 512 chips — EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    moment_dtype: str = "float32"  # "bfloat16" halves optimizer HBM
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init_optimizer(cfg: OptimizerConfig, params: Any) -> AdamWState:
+    mdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.moment_dtype]
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def apply_updates(
+    cfg: OptimizerConfig, params: Any, grads: Any, state: AdamWState
+) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    b1, b2 = cfg.betas
+    lr = lr_at(cfg, step)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    params_new = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    m_new = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    v_new = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return (
+        params_new,
+        AdamWState(step=step, m=m_new, v=v_new),
+        {"grad_norm": gnorm, "lr": lr},
+    )

@@ -1,0 +1,80 @@
+"""The jitted training step: grad + microbatching + optimizer, sharding-aware.
+
+Microbatching (gradient accumulation) runs as a lax.scan over microbatches so
+arbitrary global batches fit; each microbatch's backward is rematerialized.
+The step is a single pjit program: GSPMD handles DP gradient reductions, TP
+collectives and (optional) FSDP gathers from the sharding annotations placed
+in the model code.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.model import forward_train, init_params
+
+from .optimizer import AdamWState, OptimizerConfig, apply_updates, init_optimizer
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def create_train_state(cfg: ArchConfig, opt_cfg: OptimizerConfig, key) -> TrainState:
+    params = init_params(cfg, key)
+    return TrainState(params=params, opt=init_optimizer(opt_cfg, params))
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt_cfg: OptimizerConfig,
+    n_microbatches: int = 1,
+):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, mb):
+        loss, metrics = forward_train(cfg, params, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        if n_microbatches == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(n_microbatches, b // n_microbatches, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def mb_step(carry, mb):
+                acc, loss_acc = carry
+                (loss, _m), g = grad_fn(state.params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_acc + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (gsum, loss_sum), _ = jax.lax.scan(
+                mb_step, (zeros, jnp.zeros((), jnp.float32)), mbs
+            )
+            grads = jax.tree.map(lambda g: g / n_microbatches, gsum)
+            loss = loss_sum / n_microbatches
+            metrics = {}
+
+        params, opt, opt_metrics = apply_updates(
+            opt_cfg, state.params, grads, state.opt
+        )
+        out = {"loss": loss, **opt_metrics}
+        out.update({k: v for k, v in metrics.items()})
+        return TrainState(params=params, opt=opt), out
+
+    return train_step

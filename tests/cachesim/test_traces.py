@@ -1,0 +1,74 @@
+"""Trace generator invariants + calibration statistics."""
+
+import numpy as np
+import pytest
+
+from repro.cachesim.traces import (
+    adversarial,
+    bursty,
+    make_trace,
+    reuse_distances,
+    scan_mix,
+    shifting_zipf,
+    trace_stats,
+    zipf,
+)
+
+
+@pytest.mark.parametrize(
+    "gen", [adversarial, zipf, shifting_zipf, bursty, scan_mix]
+)
+def test_ranges_and_determinism(gen):
+    a = gen(500, 4000, seed=7)
+    b = gen(500, 4000, seed=7)
+    c = gen(500, 4000, seed=8)
+    assert a.dtype == np.int64 and len(a) == 4000
+    assert a.min() >= 0 and a.max() < 500
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_adversarial_round_robin_property():
+    """Each full round touches every item exactly once."""
+    N = 100
+    tr = adversarial(N, 300, seed=0)
+    for r in range(3):
+        assert len(set(tr[r * N : (r + 1) * N])) == N
+
+
+def test_zipf_skew():
+    tr = zipf(1000, 50_000, alpha=1.1, seed=0)
+    counts = np.bincount(tr, minlength=1000)
+    top10 = np.sort(counts)[-10:].sum()
+    assert top10 / len(tr) > 0.25  # heavy head
+
+
+def test_shifting_zipf_changes_popularity():
+    tr = shifting_zipf(1000, 20_000, phase=10_000, seed=1)
+    c1 = np.bincount(tr[:10_000], minlength=1000)
+    c2 = np.bincount(tr[10_000:], minlength=1000)
+    top1 = set(np.argsort(c1)[-20:])
+    top2 = set(np.argsort(c2)[-20:])
+    assert len(top1 & top2) < 10  # hot sets mostly disjoint across phases
+
+
+def test_bursty_short_lifetimes():
+    tr = bursty(5000, 60_000, seed=2)
+    st = trace_stats(tr)
+    assert st.hit_share_lifetime_below(100) > 0.05
+
+
+def test_scan_mix_has_sequential_runs():
+    tr = scan_mix(10_000, 20_000, seed=3)
+    diffs = np.diff(tr)
+    assert np.mean(diffs == 1) > 0.2  # sequential scans present
+
+
+def test_registry():
+    tr = make_trace("cdn_like", 100, 1000, seed=0)
+    assert len(tr) == 1000
+
+
+def test_reuse_distance():
+    rd = reuse_distances(np.array([1, 2, 1, 3, 2, 1]))
+    np.testing.assert_array_equal(rd, [2, 3, 3])

@@ -1,0 +1,83 @@
+"""Size-aware OGB (paper §8 future work) vs the eager weighted oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.ogb_sized import (
+    SizedOGB,
+    project_weighted,
+    weighted_capped_simplex_tau,
+)
+
+
+def test_weighted_projection_feasibility():
+    rng = np.random.default_rng(0)
+    y = rng.random(50)
+    s = rng.choice([1.0, 4.0, 16.0], size=50)
+    C = 30.0
+    f = project_weighted(y, s, C)
+    assert np.all(f >= -1e-9) and np.all(f <= 1 + 1e-9)
+    assert abs(np.sum(s * f) - min(C, np.sum(s * np.clip(y, 0, 1)))) < 1e-5
+
+
+def test_reduces_to_unit_size_case():
+    from repro.core.projection import project_capped_simplex
+
+    rng = np.random.default_rng(1)
+    y = rng.normal(0.4, 0.5, size=40)
+    f_w = project_weighted(y, np.ones(40), 10.0)
+    f_u = project_capped_simplex(y, 10.0)
+    np.testing.assert_allclose(f_w, f_u, atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_lazy_sized_matches_eager(seed):
+    """Request sequence: lazy per-class structure == eager weighted oracle."""
+    rng = np.random.default_rng(seed)
+    n = 20
+    classes = rng.integers(0, 3, size=n)
+    sizes_by_class = [1.0, 2.0, 8.0]
+    s = np.array([sizes_by_class[c] for c in classes])
+    C = 12.0
+    eta = 0.05
+
+    ogb = SizedOGB(
+        sizes_by_class, {i: int(classes[i]) for i in range(n)}, C, eta
+    )
+    f = np.zeros(n)  # eager reference starts empty (mass constraint is <= C
+    # until full, then projection activates — mirror the lazy semantics)
+    reqs = rng.integers(0, n, size=120)
+    for j in reqs:
+        j = int(j)
+        y = f.copy()
+        y[j] = min(y[j] + eta * s[j], 1.0)
+        if np.sum(s * y) > C:
+            f = project_weighted(y, s, C)
+        else:
+            f = y
+        ogb.update(j)
+        got = ogb.fractional_vector(n)
+        np.testing.assert_allclose(got, f, atol=5e-6, err_msg=f"item {j}")
+
+
+def test_byte_hit_optimization():
+    """Equal request rates, very different sizes: under byte-hit reward the
+    policy fills capacity with the items that maximize bytes served."""
+    rng = np.random.default_rng(2)
+    n = 60
+    classes = {i: (0 if i < 30 else 1) for i in range(n)}
+    sizes = [1.0, 10.0]
+    C = 100.0
+    ogb = SizedOGB(sizes, classes, C, eta=0.02)
+    for _ in range(20_000):
+        ogb.update(int(rng.integers(0, n)))
+    f = ogb.fractional_vector(n)
+    bytes_small = float(np.sum(f[:30]) * 1.0)
+    bytes_big = float(np.sum(f[30:]) * 10.0)
+    assert bytes_big > 2.0 * bytes_small  # capacity flows to byte-heavy items
+    # capacity constraint respected
+    s = np.array([sizes[classes[i]] for i in range(n)])
+    assert np.sum(s * f) <= C + 1e-6

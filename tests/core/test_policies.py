@@ -1,0 +1,96 @@
+"""Unit tests for the classic policies and FTPL."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.ftpl import FTPL
+from repro.core.policies import ARC, FIFO, GDS, LFU, LRU, make_policy
+
+
+def test_lru_semantics():
+    p = LRU(10, 2)
+    assert not p.request(1)
+    assert not p.request(2)
+    assert p.request(1)  # hit, moves 1 to MRU
+    assert not p.request(3)  # evicts 2
+    assert not p.request(2)
+    assert p.request(3)
+
+
+def test_fifo_semantics():
+    p = FIFO(10, 2)
+    p.request(1)
+    p.request(2)
+    assert p.request(1)  # hit; FIFO does NOT refresh
+    p.request(3)  # evicts 1 (oldest)
+    assert not p.request(1)
+
+
+def test_lfu_prefers_frequent():
+    p = LFU(10, 2)
+    for _ in range(5):
+        p.request(1)
+    for _ in range(3):
+        p.request(2)
+    p.request(3)  # freq 1 < min(5,3): not admitted
+    assert p.contains(1) and p.contains(2)
+    assert not p.contains(3)
+
+
+def test_arc_adapts():
+    p = ARC(100, 4)
+    for i in [1, 2, 3, 4, 5, 1, 2, 3, 4, 5]:
+        p.request(i)
+    assert p.occupancy() <= 4
+    # frequent items should survive a scan
+    for i in range(6, 30):
+        p.request(i)
+    assert p.occupancy() <= 4
+
+
+def test_gds_unit_cost_evicts_lowest_h():
+    p = GDS(10, 2)
+    p.request(1)
+    p.request(2)
+    assert p.request(1)
+    p.request(3)
+    assert p.occupancy() == 2
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_ftpl_matches_bruteforce_topC(seed):
+    """FTPL's incremental top-C must equal argmax over all scores."""
+    N, C = 30, 5
+    ftpl = FTPL(N, C, zeta=2.0, seed=seed)
+    rng = np.random.default_rng(seed)
+    counts = np.zeros(N)
+    for j in rng.integers(0, N, size=200):
+        ftpl.request(int(j))
+        counts[j] += 1
+        scores = counts + ftpl._noise
+        top = set(int(i) for i in np.argpartition(scores, N - C)[N - C :])
+        assert set(ftpl.cached) == top or _tie_tolerant(scores, ftpl.cached, top)
+
+
+def _tie_tolerant(scores, got, expected):
+    """Sets may differ only on exactly-tied scores."""
+    diff = set(got) ^ expected
+    if not diff:
+        return True
+    vals = sorted(scores[i] for i in diff)
+    return max(vals) - min(vals) < 1e-12
+
+
+def test_make_policy_registry():
+    for kind in ["lru", "lfu", "fifo", "arc", "gds"]:
+        p = make_policy(kind, 100, 10)
+        p.request(1)
+        assert p.occupancy() >= 0
+    p = make_policy("ogb", 100, 10, eta=0.01)
+    p.request(1)
+    p = make_policy("ogb_cl", 100, 10, eta=0.01)
+    p.request(1)
+    p = make_policy("ftpl", 100, 10, zeta=1.0)
+    p.request(1)

@@ -1,0 +1,88 @@
+"""Properties of the eager capped-simplex projection oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.projection import (
+    capped_simplex_tau,
+    capped_simplex_tau_bisect,
+    project_capped_simplex,
+)
+
+
+@given(
+    n=st.integers(2, 60),
+    c_frac=st.floats(0.05, 0.95),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=200, deadline=None)
+def test_projection_feasibility(n, c_frac, seed):
+    rng = np.random.default_rng(seed)
+    C = max(1, int(round(n * c_frac)))
+    y = rng.normal(0.5, 1.0, size=n)
+    f = project_capped_simplex(y, C)
+    assert np.all(f >= -1e-9)
+    assert np.all(f <= 1 + 1e-9)
+    assert abs(f.sum() - C) < 1e-6
+
+
+@given(n=st.integers(2, 40), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=100, deadline=None)
+def test_projection_idempotent_on_feasible(n, seed):
+    rng = np.random.default_rng(seed)
+    C = max(1, n // 3)
+    # random feasible point: project a random vector first
+    f = project_capped_simplex(rng.normal(0.5, 1.0, size=n), C)
+    f2 = project_capped_simplex(f, C)
+    np.testing.assert_allclose(f2, f, atol=1e-8)
+
+
+@given(n=st.integers(2, 40), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=100, deadline=None)
+def test_exact_matches_bisection(n, seed):
+    rng = np.random.default_rng(seed)
+    C = max(1, n // 4)
+    y = rng.normal(0.3, 0.8, size=n)
+    t1 = capped_simplex_tau(y, C)
+    t2 = capped_simplex_tau_bisect(y, C, iters=80)
+    f1 = np.clip(y - t1, 0, 1)
+    f2 = np.clip(y - t2, 0, 1)
+    np.testing.assert_allclose(f1, f2, atol=1e-7)
+
+
+@given(n=st.integers(3, 40), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=100, deadline=None)
+def test_projection_optimality_kkt(n, seed):
+    """Check the KKT structure directly: f = clip(y - tau, 0, 1)."""
+    rng = np.random.default_rng(seed)
+    C = max(1, n // 3)
+    y = rng.normal(0.5, 1.0, size=n)
+    f = project_capped_simplex(y, C)
+    tau = capped_simplex_tau(y, C)
+    np.testing.assert_allclose(f, np.clip(y - tau, 0, 1), atol=1e-9)
+    # projection is the closest feasible point: compare against random
+    # feasible candidates
+    for _ in range(5):
+        g = project_capped_simplex(rng.normal(0.5, 1.0, size=n), C)
+        assert np.sum((f - y) ** 2) <= np.sum((g - y) ** 2) + 1e-7
+
+
+def test_projection_single_bump():
+    """The OGB case: feasible f plus eta on one coordinate."""
+    f = np.array([0.5, 0.3, 0.2, 0.0, 1.0])
+    C = f.sum()
+    y = f.copy()
+    y[1] += 0.2
+    proj = project_capped_simplex(y, C)
+    assert abs(proj.sum() - C) < 1e-9
+    assert proj[1] > f[1]  # requested coordinate grew
+    assert proj[3] == 0.0  # zero coordinate stays zero
+
+
+def test_rejects_bad_capacity():
+    with pytest.raises(ValueError):
+        capped_simplex_tau(np.ones(3), 0)
+    with pytest.raises(ValueError):
+        capped_simplex_tau(np.ones(3), 4)

@@ -1,0 +1,90 @@
+"""Regret properties — the paper's headline guarantees, checked empirically.
+
+* Theorem 3.1: OGB's regret <= sqrt(C (1 - C/N) T B) under the prescribed eta,
+  for any trace.  We check it on adversarial + zipf + shifting traces (the
+  theorem is a sup over traces, so every instance must satisfy the bound).
+* Paper Fig 2 / [29]: LRU and LFU have *linear* regret on the adversarial
+  round-robin trace (hit ratio -> 0), while OGB approaches OPT.
+"""
+
+import numpy as np
+import pytest
+
+from repro.cachesim.simulator import simulate
+from repro.cachesim.traces import adversarial, shifting_zipf, zipf
+from repro.core.ogb import OGB, theoretical_regret_bound
+from repro.core.policies import LFU, LRU
+from repro.core.regret import (
+    best_static_hits,
+    best_static_set,
+    prefix_opt_hits,
+    regret_curve,
+)
+
+
+def test_prefix_opt_matches_bruteforce():
+    rng = np.random.default_rng(0)
+    trace = rng.integers(0, 12, size=300)
+    C = 4
+    curve = prefix_opt_hits(trace, C)
+    # brute force at a few prefixes
+    for t in [1, 7, 50, 150, 300]:
+        counts = np.bincount(trace[:t], minlength=12)
+        expect = np.sort(counts)[-C:].sum()
+        assert curve[t] == expect, t
+
+
+def test_opt_static_hits():
+    trace = np.array([0, 0, 0, 1, 1, 2, 3, 0, 1])
+    assert best_static_hits(trace, 2) == 7  # items 0 (4) + 1 (3)
+    assert set(best_static_set(trace, 2)) == {0, 1}
+
+
+@pytest.mark.parametrize(
+    "trace_fn,kw",
+    [
+        (adversarial, {}),
+        (zipf, {"alpha": 0.9}),
+        (shifting_zipf, {"phase": 500}),
+    ],
+)
+def test_ogb_regret_below_theorem_bound(trace_fn, kw):
+    N, C, T = 200, 50, 4000
+    trace = trace_fn(N, T, seed=1, **kw)
+    ogb = OGB(N, C, horizon=T, batch_size=1, seed=0)
+    res = simulate(ogb, trace, window=T)
+    # fractional regret is what Theorem 3.1 bounds; hits fluctuate around it
+    opt = best_static_hits(trace, C)
+    frac_regret = opt - ogb.stats.fractional_reward
+    bound = theoretical_regret_bound(C, N, T, 1)
+    assert frac_regret <= bound * 1.05, (frac_regret, bound)
+
+
+def test_adversarial_ogb_beats_lru_lfu():
+    """Paper Fig 2: round-robin permutations starve LRU/LFU; OGB ~ OPT = C/N."""
+    N, C, T = 300, 75, 30_000
+    trace = adversarial(N, T, seed=2)
+    r_lru = simulate(LRU(N, C), trace, window=T)
+    r_lfu = simulate(LFU(N, C), trace, window=T)
+    ogb = OGB(N, C, horizon=T, seed=0)
+    r_ogb = simulate(ogb, trace, window=T)
+    opt_ratio = C / N  # any C items give C/N on round-robin
+    assert r_lru.hit_ratio < 0.05
+    assert r_lfu.hit_ratio < 0.6 * opt_ratio
+    assert r_ogb.hit_ratio > 0.7 * opt_ratio
+    # and the fractional reward should be closer still
+    assert ogb.stats.fractional_reward / T > 0.8 * opt_ratio
+
+
+def test_lru_linear_regret_adversarial():
+    """Regret curve of LRU grows ~linearly; OGB's flattens (sub-linear)."""
+    N, C, T = 200, 50, 20_000
+    trace = adversarial(N, T, seed=3)
+    r_lru = simulate(LRU(N, C), trace, window=T)
+    reg = regret_curve(r_lru.cum_hits, trace, C)
+    # linear growth: regret at T ~ 2x regret at T/2 (within slack)
+    assert reg[-1] > 1.6 * reg[len(reg) // 2]
+    ogb = OGB(N, C, horizon=T, seed=0)
+    r_ogb = simulate(ogb, trace, window=T)
+    reg_ogb = regret_curve(r_ogb.cum_hits, trace, C)
+    assert reg_ogb[-1] < 0.5 * reg[-1]

@@ -1,0 +1,121 @@
+"""Properties of the coordinated Poisson sampling (Algorithm 3) and Madow.
+
+Key paper claims checked:
+  * E[x_i] = f_i (soft capacity: E[occupancy] = C)
+  * occupancy coefficient of variation <= 1/sqrt(C) (paper §5.1)
+  * positive coordination: the cache state is exactly {i : f_i >= p_i} at
+    every batch boundary (permanent-random-number rule), so consecutive
+    samples overlap maximally given the marginals
+  * Madow systematic sampling returns exactly C items with P(i) = f_i
+"""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.ogb import OGB
+from repro.core.ogb_classic import madow_sample
+
+
+def _drive(ogb, reqs):
+    for j in reqs:
+        ogb.request(int(j))
+
+
+@given(seed=st.integers(0, 2**31 - 1), B=st.sampled_from([1, 3, 10]))
+@settings(max_examples=30, deadline=None)
+def test_cache_state_matches_poisson_rule(seed, B):
+    """After every batch boundary: x_i == (f_i >= p_i) for all i (eager mode)."""
+    N, C = 40, 8
+    rng = np.random.default_rng(seed)
+    ogb = OGB(N, C, eta=0.05, batch_size=B, lazy_init=False, seed=seed)
+    reqs = rng.integers(0, N, size=12 * B)
+    for t, j in enumerate(reqs):
+        ogb.request(int(j))
+        if (t + 1) % B == 0:
+            f = ogb.fractional_vector()
+            for i in range(N):
+                p_i = ogb._perm_rand(i)
+                expected = f[i] >= p_i
+                got = ogb.contains(i)
+                # boundary-equal cases can tip either way within fp noise
+                if abs(f[i] - p_i) > 1e-9:
+                    assert got == expected, (i, f[i], p_i)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_lazy_and_eager_sampling_agree(seed):
+    """lazy_init must not change cache decisions (same PRF p_i)."""
+    N, C, B = 60, 10, 4
+    rng = np.random.default_rng(seed)
+    reqs = rng.integers(0, N, size=80)
+    a = OGB(N, C, eta=0.07, batch_size=B, lazy_init=True, seed=seed)
+    b = OGB(N, C, eta=0.07, batch_size=B, lazy_init=False, seed=seed)
+    hits_a, hits_b = [], []
+    for j in reqs:
+        hits_a.append(a.request(int(j)))
+        hits_b.append(b.request(int(j)))
+    assert hits_a == hits_b
+    np.testing.assert_allclose(a.fractional_vector(), b.fractional_vector(), atol=1e-9)
+    for i in range(N):
+        assert a.contains(i) == b.contains(i)
+
+
+def test_expected_occupancy_is_C():
+    """E[occupancy] = C across seeds (soft constraint, paper §5.1)."""
+    N, C = 200, 40
+    occs = []
+    for seed in range(30):
+        ogb = OGB(N, C, eta=0.02, batch_size=1, lazy_init=False, seed=seed)
+        reqs = np.random.default_rng(seed).integers(0, N, size=300)
+        _drive(ogb, reqs)
+        occs.append(ogb.occupancy())
+    occs = np.asarray(occs, dtype=float)
+    # CV <= 1/sqrt(C) ~= 0.158; the mean over 30 seeds should be within ~3 se
+    se = occs.std() / np.sqrt(len(occs))
+    assert abs(occs.mean() - C) < max(3 * se, 0.05 * C), (occs.mean(), se)
+    assert occs.std() / C <= 1.5 / np.sqrt(C)
+
+
+def test_positive_coordination_small_churn():
+    """Consecutive samples overlap: per-batch evictions ~ O(B), not O(C)."""
+    N, C, B = 1000, 100, 10
+    ogb = OGB(N, C, horizon=5000, batch_size=B, lazy_init=False, seed=3)
+    rng = np.random.default_rng(3)
+    w = 1.0 / np.arange(1, N + 1) ** 0.9
+    reqs = rng.choice(N, size=5000, p=w / w.sum())
+    _drive(ogb, reqs)
+    n_batches = ogb.stats.sample_updates
+    assert n_batches > 0
+    # paper: on average ~B elements evicted per sample update
+    assert ogb.stats.evictions / n_batches < 3 * B
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_madow_exact_size(seed):
+    rng = np.random.default_rng(seed)
+    N, C = 50, 12
+    f = rng.random(N)
+    f = f / f.sum() * C
+    f = np.clip(f, 0, 1)
+    # renormalize into the capped simplex (approximately fine for the test)
+    f = f * (C / f.sum())
+    f = np.clip(f, 0, 1)
+    sample = madow_sample(f, C, rng)
+    assert len(sample) == C
+
+
+def test_madow_marginals():
+    rng = np.random.default_rng(0)
+    N, C = 20, 5
+    f = np.array([0.9, 0.8, 0.7, 0.6, 0.5, 0.4, 0.3, 0.3, 0.2, 0.1] + [0.02] * 10)
+    f = f * (C / f.sum())
+    counts = np.zeros(N)
+    trials = 3000
+    for _ in range(trials):
+        for i in set(madow_sample(f, C, rng)):
+            counts[i] += 1
+    emp = counts / trials
+    np.testing.assert_allclose(emp, f, atol=0.05)

@@ -1,0 +1,85 @@
+"""Treap / SortedKeyStore equivalence and correctness."""
+
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.treap import SortedKeyStore, Treap, make_store
+
+
+@pytest.mark.parametrize("kind", ["treap", "sorted"])
+def test_basic_ops(kind):
+    s = make_store(kind)
+    s.insert(3.0, 1)
+    s.insert(1.0, 2)
+    s.insert(2.0, 3)
+    assert len(s) == 3
+    assert s.min() == (1.0, 2)
+    assert s.count_below(2.5) == 2
+    assert s.remove(2.0, 3)
+    assert not s.remove(2.0, 3)  # already gone
+    assert s.pop_min() == (1.0, 2)
+    assert s.min() == (3.0, 1)
+
+
+@given(ops=st.lists(st.tuples(st.integers(0, 2), st.integers(0, 20)), max_size=300))
+@settings(max_examples=100, deadline=None)
+def test_treap_matches_sorted_reference(ops):
+    """Random op sequences: treap == brute-force sorted list."""
+    t = Treap(seed=42)
+    ref = []  # list of (key, item)
+    rng = random.Random(0)
+    live = {}
+    for op, item in ops:
+        if op == 0:  # insert
+            key = round(rng.uniform(0, 10), 6)
+            if item in live:
+                continue
+            t.insert(key, item)
+            ref.append((key, item))
+            live[item] = key
+        elif op == 1 and live:  # remove existing
+            victim = sorted(live)[item % len(live)]
+            key = live.pop(victim)
+            assert t.remove(key, victim)
+            ref.remove((key, victim))
+        elif op == 2 and ref:  # pop_min
+            got_key, got_item = t.pop_min()
+            exp_key = min(k for k, _ in ref)
+            assert got_key == exp_key
+            ref.remove((got_key, got_item))
+            live.pop(got_item, None)
+        assert len(t) == len(ref)
+        if ref:
+            assert t.min()[0] == min(k for k, _ in ref)
+    inorder = [k for k, _ in t]
+    assert inorder == sorted(inorder)
+
+
+def test_treap_large_balanced():
+    """Depth sanity via timing proxy: 20k inserts + pops stay fast."""
+    t = Treap(seed=1)
+    rng = random.Random(2)
+    keys = [(rng.random(), i) for i in range(20_000)]
+    for k, i in keys:
+        t.insert(k, i)
+    assert len(t) == 20_000
+    prev = -1.0
+    for _ in range(20_000):
+        k, _ = t.pop_min()
+        assert k >= prev
+        prev = k
+    assert len(t) == 0
+
+
+def test_count_below():
+    s = SortedKeyStore()
+    for i in range(100):
+        s.insert(i * 0.01, i)
+    assert s.count_below(0.5) == 50
+    t = Treap()
+    for i in range(100):
+        t.insert(i * 0.01, i)
+    assert t.count_below(0.5) == 50

@@ -1,0 +1,47 @@
+"""Paper footnote 4: general rewards w_{t,i} (e.g. retrieval costs).
+
+The lazy projection must still match the eager oracle when the gradient step
+is eta * w_t, and a cost-aware OGB should learn to prefer expensive items.
+"""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.ogb import OGB
+from repro.core.projection import project_capped_simplex
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_weighted_lazy_equals_eager(seed):
+    n, C, eta = 15, 5, 0.2
+    rng = np.random.default_rng(seed)
+    reqs = rng.integers(0, n, size=50)
+    weights = rng.uniform(0.2, 3.0, size=50)
+
+    f = np.full(n, C / n)
+    ogb = OGB(n, C, eta=eta, batch_size=1, lazy_init=True)
+    for j, w in zip(reqs, weights):
+        y = f.copy()
+        y[j] += eta * w
+        f = project_capped_simplex(y, C)
+        ogb.update_probabilities(int(j), weight=float(w))
+        np.testing.assert_allclose(ogb.fractional_vector(), f, atol=1e-8)
+
+
+def test_cost_aware_caching_prefers_expensive_items():
+    """Two equally-popular groups, one 5x costlier: cache the costly one."""
+    n, C = 100, 20
+    T = 20_000
+    rng = np.random.default_rng(0)
+    ogb = OGB(n, C, horizon=T, batch_size=10, seed=0)
+    cheap = np.arange(0, 30)
+    costly = np.arange(30, 60)
+    for _ in range(T // 2):
+        if rng.random() < 0.5:
+            ogb.request(int(rng.choice(cheap)), weight=1.0)
+        else:
+            ogb.request(int(rng.choice(costly)), weight=5.0)
+    f = ogb.fractional_vector()
+    assert f[costly].sum() > 2.0 * f[cheap].sum()

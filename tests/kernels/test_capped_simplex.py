@@ -1,0 +1,82 @@
+"""Pallas capped-simplex kernel vs pure-jnp/numpy oracles — shape/dtype sweep."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.projection import project_capped_simplex
+from repro.kernels.capped_simplex.ops import fused_ogb_update
+from repro.kernels.capped_simplex.ref import fused_ogb_update_ref
+
+
+def _mk(n, B, seed, dtype):
+    rng = np.random.default_rng(seed)
+    f = rng.random(n)
+    C = max(1, n // 10)
+    f = np.clip(f * (C / f.sum()), 0, 1)
+    # renormalize onto the simplex via the exact oracle
+    f = project_capped_simplex(f, C)
+    ids = rng.integers(0, n, size=B)
+    counts = np.bincount(ids, minlength=n).astype(np.float64)
+    return f.astype(dtype), counts.astype(dtype), C
+
+
+@pytest.mark.parametrize("n", [1000, 32768, 100_000])
+@pytest.mark.parametrize("dtype", [np.float32])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_matches_exact_oracle(n, dtype, seed):
+    f, counts, C = _mk(n, 512, seed, dtype)
+    eta = 0.01
+    got = fused_ogb_update(
+        jnp.asarray(f), jnp.asarray(counts), eta, float(C), interpret=True
+    )
+    expect = project_capped_simplex(f.astype(np.float64) + eta * counts, C)
+    np.testing.assert_allclose(np.asarray(got), expect, atol=2e-4)
+    assert abs(float(jnp.sum(got)) - C) < 0.05
+
+
+@pytest.mark.parametrize("n,block_rows", [(4096, 8), (65536, 256), (9999, 32)])
+def test_block_shape_sweep(n, block_rows):
+    f, counts, C = _mk(n, 256, 3, np.float32)
+    eta = 0.05
+    got = fused_ogb_update(
+        jnp.asarray(f),
+        jnp.asarray(counts),
+        eta,
+        float(C),
+        block_rows=block_rows,
+        interpret=True,
+    )
+    ref = fused_ogb_update_ref(jnp.asarray(f), jnp.asarray(counts), eta, float(C))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-4)
+
+
+@pytest.mark.parametrize("passes,k", [(2, 64), (3, 64), (3, 32), (4, 16)])
+def test_pass_count_accuracy(passes, k):
+    f, counts, C = _mk(20000, 1024, 5, np.float32)
+    eta = 0.02
+    got = fused_ogb_update(
+        jnp.asarray(f),
+        jnp.asarray(counts),
+        eta,
+        float(C),
+        passes=passes,
+        k=k,
+        interpret=True,
+    )
+    expect = project_capped_simplex(f.astype(np.float64) + eta * counts, C)
+    np.testing.assert_allclose(np.asarray(got), expect, atol=5e-4)
+
+
+def test_large_eta_saturation():
+    """Drive coordinates to the [0,1] bounds."""
+    n, C = 5000, 500
+    f = np.full(n, C / n, np.float32)
+    counts = np.zeros(n, np.float32)
+    counts[:3] = 200.0  # huge mass on three items
+    eta = 0.05
+    got = fused_ogb_update(jnp.asarray(f), jnp.asarray(counts), eta, float(C))
+    expect = project_capped_simplex(f.astype(np.float64) + eta * counts, C)
+    np.testing.assert_allclose(np.asarray(got), expect, atol=5e-4)
+    assert float(got[0]) > 0.999  # saturated at 1

@@ -1,0 +1,67 @@
+"""Pallas GQA flash-decode kernel vs jnp oracle — shape/dtype sweep."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _mk(B, H, Hkv, D, S, seed, dtype):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(B, H, D)).astype(dtype)
+    k = rng.normal(size=(B, S, Hkv, D)).astype(dtype)
+    v = rng.normal(size=(B, S, Hkv, D)).astype(dtype)
+    lengths = rng.integers(1, S + 1, size=B).astype(np.int32)
+    return map(jnp.asarray, (q, k, v, lengths))
+
+
+@pytest.mark.parametrize(
+    "B,H,Hkv,D,S",
+    [
+        (2, 8, 8, 64, 256),  # MHA
+        (2, 8, 2, 64, 256),  # GQA 4:1
+        (1, 16, 1, 128, 512),  # MQA
+        (3, 4, 4, 128, 130),  # ragged S (padding path)
+    ],
+)
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_matches_ref(B, H, Hkv, D, S, dtype):
+    q, k, v, lengths = _mk(B, H, Hkv, D, S, 0, dtype)
+    got = decode_attention(q, k, v, lengths, s_block=128, interpret=True)
+    ref = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_bf16_inputs():
+    q, k, v, lengths = _mk(2, 8, 4, 64, 256, 3, np.float32)
+    q, k, v = (x.astype(jnp.bfloat16) for x in (q, k, v))
+    got = decode_attention(q, k, v, lengths, s_block=128, interpret=True)
+    ref = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), atol=3e-2
+    )
+
+
+@pytest.mark.parametrize("s_block", [64, 128, 512])
+def test_s_block_sweep(s_block):
+    q, k, v, lengths = _mk(2, 8, 4, 64, 512, 5, np.float32)
+    got = decode_attention(q, k, v, lengths, s_block=s_block, interpret=True)
+    ref = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_short_lengths_mask():
+    """All-masked blocks must not contribute (running max stays -inf safe)."""
+    B, H, Hkv, D, S = 2, 4, 2, 64, 512
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    lengths = jnp.asarray([1, 3], jnp.int32)  # only the first block has data
+    got = decode_attention(q, k, v, lengths, s_block=128, interpret=True)
+    ref = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5, rtol=2e-5)
+    assert np.isfinite(np.asarray(got)).all()

@@ -1,0 +1,40 @@
+"""Pallas histogram kernel vs oracle — shape sweep."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels.scatter_counts.ops import scatter_counts
+from repro.kernels.scatter_counts.ref import scatter_counts_ref
+
+
+@pytest.mark.parametrize("n", [1024, 4096, 10_000])
+@pytest.mark.parametrize("b", [17, 256, 1024])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_matches_ref(n, b, seed):
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, n, size=b), jnp.int32)
+    got = scatter_counts(ids, n, interpret=True)
+    ref = scatter_counts_ref(ids, n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    assert float(got.sum()) == b
+
+
+def test_padding_ignored():
+    ids = jnp.asarray([3, 3, -1, 5, -1], jnp.int32)
+    got = scatter_counts(ids, 1024, interpret=True)
+    assert float(got[3]) == 2 and float(got[5]) == 1
+    assert float(got.sum()) == 3
+
+
+@pytest.mark.parametrize("block_rows,id_chunk", [(8, 128), (16, 512), (32, 64)])
+def test_block_sweep(block_rows, id_chunk):
+    rng = np.random.default_rng(7)
+    n, b = 8192, 700
+    ids = jnp.asarray(rng.integers(0, n, size=b), jnp.int32)
+    got = scatter_counts(
+        ids, n, block_rows=block_rows, id_chunk=id_chunk, interpret=True
+    )
+    ref = scatter_counts_ref(ids, n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))

@@ -1,0 +1,64 @@
+"""§Perf H3: int8 KV cache — accuracy and layout checks."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_smoke
+from repro.models.model import decode_step, init_cache, init_params, prefill
+
+
+def _int8_cfg():
+    return dataclasses.replace(get_smoke("mistral-nemo-12b"), kv_cache_dtype="int8")
+
+
+def test_cache_layout_halves_kv_bytes():
+    cfg = _int8_cfg()
+    cache = init_cache(cfg, batch=2, max_len=32)
+    assert cache["kv"]["k"].dtype == jnp.int8
+    assert "k_scale" in cache["kv"]
+    f32_bytes = 2 * 32 * cfg.n_kv_heads * cfg.head_dim * cfg.n_layers * 2 * 2  # bf16
+    int8_bytes = (
+        2 * 32 * cfg.n_kv_heads * cfg.head_dim * cfg.n_layers * 2 * 1
+        + 2 * 32 * cfg.n_kv_heads * cfg.n_layers * 2 * 4
+    )
+    assert int8_bytes < 0.66 * f32_bytes  # ~0.53x with head_dim=16 scales
+
+
+def test_int8_decode_close_to_fp():
+    cfg_q = _int8_cfg()
+    cfg_f = get_smoke("mistral-nemo-12b")
+    params = init_params(cfg_f, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg_f.vocab_size, (1, 8)).astype(np.int32)
+
+    def run(cfg):
+        cache = init_cache(cfg, 1, 16)
+        step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+        for t in range(8):
+            logits, cache = step(params, cache, jnp.asarray(toks[:, t]))
+        return np.asarray(logits)
+
+    lq, lf = run(cfg_q), run(cfg_f)
+    # int8 KV quantization error should barely move the logits
+    denom = np.maximum(np.abs(lf).max(), 1e-6)
+    assert np.abs(lq - lf).max() / denom < 0.08, np.abs(lq - lf).max()
+
+
+def test_int8_prefill_matches_decode():
+    cfg = _int8_cfg()
+    params = init_params(cfg, jax.random.key(1))
+    rng = np.random.default_rng(1)
+    toks = rng.integers(1, cfg.vocab_size, (1, 6)).astype(np.int32)
+    logits_pre, _ = prefill(cfg, params, {"tokens": jnp.asarray(toks)}, 16)
+    cache = init_cache(cfg, 1, 16)
+    step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+    for t in range(6):
+        logits_dec, cache = step(params, cache, jnp.asarray(toks[:, t]))
+    np.testing.assert_allclose(
+        np.asarray(logits_pre), np.asarray(logits_dec), atol=5e-3, rtol=5e-2
+    )

@@ -1,0 +1,31 @@
+"""Parity: model forward with the Pallas flash_prefill backend == jnp flash."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_smoke
+from repro.models import attention
+from repro.models.model import forward_train, init_params
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "gemma-7b"])
+def test_pallas_prefill_parity(arch):
+    cfg = get_smoke(arch)
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 64)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 64)), jnp.int32),
+    }
+    try:
+        loss_jnp, _ = forward_train(cfg, params, batch)
+        attention.set_pallas_prefill(True)
+        loss_pls, _ = forward_train(cfg, params, batch)
+    finally:
+        attention.set_pallas_prefill(False)
+    np.testing.assert_allclose(
+        float(loss_jnp), float(loss_pls), rtol=1e-5, atol=1e-5
+    )

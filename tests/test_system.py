@@ -1,0 +1,73 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The two headline behaviours, exercised through the full stack:
+  1. the O(log N) no-regret policy beats recency/frequency policies under
+     pattern shifts and tracks OPT (the paper's core claim), and
+  2. the policy works as the serving-layer page-cache of a real (smoke-scale)
+     LM engine end-to-end with training/checkpointing alongside.
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.cachesim.simulator import simulate
+from repro.cachesim.traces import adversarial, shifting_zipf
+from repro.configs.base import get_smoke, list_archs
+from repro.core import LRU, OGB, best_static_hits
+from repro.models.model import init_params
+from repro.serve.engine import ServeEngine
+from repro.serve.kvcache import PagedKVPool
+
+
+def test_end_to_end_no_regret_vs_classics():
+    """Adversarial + shifting traffic: OGB stays near OPT, LRU doesn't."""
+    N, C, T = 400, 100, 40_000
+    trace = np.concatenate(
+        [adversarial(N, T // 2, seed=0), shifting_zipf(N, T // 2, phase=5000, seed=1)]
+    )
+    ogb = OGB(N, C, horizon=T, seed=0)
+    r_ogb = simulate(ogb, trace, window=T, record_cum=False)
+    r_lru = simulate(LRU(N, C), trace, window=T, record_cum=False)
+    opt = best_static_hits(trace, C) / T
+    assert r_ogb.hit_ratio > r_lru.hit_ratio
+    assert r_ogb.hit_ratio > 0.6 * opt
+
+
+def test_end_to_end_serving_with_training_and_cache():
+    """Train a smoke LM a few steps, serve it behind an OGB page pool."""
+    from repro.train.data import DataConfig, SyntheticLM
+    from repro.train.optimizer import OptimizerConfig
+    from repro.train.train_step import create_train_state, make_train_step
+
+    cfg = get_smoke("glm4-9b")
+    opt_cfg = OptimizerConfig(lr=3e-3, warmup_steps=2, total_steps=20)
+    state = create_train_state(cfg, opt_cfg, jax.random.key(0))
+    data = SyntheticLM(
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+    )
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    first = last = None
+    for _ in range(20):
+        state, m = step(state, {k: jnp.asarray(v) for k, v in data.next_batch().items()})
+        first = float(m["loss"]) if first is None else first
+        last = float(m["loss"])
+    assert last < first  # it learned something
+
+    policy = OGB(catalog_size=1 << 14, capacity=16, eta=0.25, batch_size=16, seed=0)
+    pool = PagedKVPool(policy, page_size=4)
+    engine = ServeEngine(cfg, state.params, pool=pool, max_len=24)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(1, cfg.vocab_size, (2, 16)).astype(np.int32)
+    out = None
+    for _ in range(6):
+        out = engine.generate(prompt, max_new_tokens=4)
+    assert out.shape == (2, 4)
+    assert engine.stats.prefix_reuse > 0.0  # repeated prompts got cached
+    # greedy decoding from fixed params is deterministic
+    np.testing.assert_array_equal(out, engine.generate(prompt, max_new_tokens=4))
+
+
+def test_all_archs_registered():
+    assert len(list_archs()) == 10

@@ -1,0 +1,89 @@
+"""Training substrate: loss decreases, microbatching equivalence, optimizer."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_smoke
+from repro.train.data import DataConfig, SyntheticLM
+from repro.train.optimizer import OptimizerConfig, global_norm, init_optimizer, lr_at
+from repro.train.train_step import TrainState, create_train_state, make_train_step
+
+
+def test_lr_schedule():
+    cfg = OptimizerConfig(lr=1e-3, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    assert float(lr_at(cfg, jnp.asarray(0))) == 0.0
+    assert abs(float(lr_at(cfg, jnp.asarray(10))) - 1e-3) < 1e-9
+    assert float(lr_at(cfg, jnp.asarray(100))) >= 0.1 * 1e-3 - 1e-9
+    assert float(lr_at(cfg, jnp.asarray(55))) < 1e-3
+
+
+def test_loss_decreases_small_lm():
+    cfg = get_smoke("gemma-7b")
+    opt_cfg = OptimizerConfig(lr=3e-3, warmup_steps=5, total_steps=100, clip_norm=1.0)
+    state = create_train_state(cfg, opt_cfg, jax.random.key(0))
+    data = SyntheticLM(
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8, seed=0)
+    )
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    losses = []
+    for _ in range(30):
+        batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.2, (losses[0], losses[-1])
+    assert np.isfinite(losses).all()
+
+
+def test_microbatch_equivalence():
+    """grad accumulation over 4 microbatches == single big batch step."""
+    cfg = get_smoke("qwen3-14b")
+    opt_cfg = OptimizerConfig(lr=1e-3, warmup_steps=0, total_steps=10, clip_norm=1e9)
+    state = create_train_state(cfg, opt_cfg, jax.random.key(1))
+    data = SyntheticLM(
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=8, seed=1)
+    )
+    batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+    s1, m1 = jax.jit(make_train_step(cfg, opt_cfg, n_microbatches=1))(state, batch)
+    s4, m4 = jax.jit(make_train_step(cfg, opt_cfg, n_microbatches=4))(state, batch)
+    # z-loss means microbatch-mean-of-means == full mean only when sizes are
+    # equal, which they are here
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s4.params)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=2e-5
+        )
+
+
+def test_grad_clipping():
+    opt_cfg = OptimizerConfig(clip_norm=1.0)
+    params = {"w": jnp.ones((4,))}
+    grads = {"w": jnp.full((4,), 100.0)}
+    st = init_optimizer(opt_cfg, params)
+    from repro.train.optimizer import apply_updates
+
+    _p, _s, metrics = apply_updates(opt_cfg, params, grads, st)
+    assert float(metrics["grad_norm"]) > 1.0  # raw norm reported
+
+
+def test_data_determinism_and_cursor():
+    cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=4, seed=7)
+    a = SyntheticLM(cfg)
+    b1 = a.next_batch()
+    b2 = a.next_batch()
+    # restore cursor -> identical replay
+    b = SyntheticLM(cfg)
+    b.load_state_dict({"step": 1})
+    b2r = b.next_batch()
+    np.testing.assert_array_equal(b2["tokens"], b2r["tokens"])
+    assert not np.array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_data_sharding_partitions():
+    kw = dict(vocab_size=50, seq_len=4, global_batch=8, seed=3, n_shards=2)
+    s0 = SyntheticLM(DataConfig(shard_id=0, **kw)).next_batch()
+    s1 = SyntheticLM(DataConfig(shard_id=1, **kw)).next_batch()
+    assert s0["tokens"].shape == (4, 4)
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
