@@ -12,6 +12,7 @@ import time
 
 import numpy as np
 
+from repro.cachesim.replay import replay_trace
 from repro.cachesim.traces import zipf
 from repro.core.ftpl import FTPL
 from repro.core.ogb import OGB
@@ -25,6 +26,7 @@ def main() -> dict:
     sizes = scale([10_000, 100_000, 1_000_000], [10_000, 100_000, 1_000_000, 10_000_000])
     T = scale(50_000, 200_000)
     T_cl = scale(300, 1000)  # OGB_cl is too slow for full T at large N
+    B_scan = 1000  # the batched data-plane operating point
     out = {}
     for N in sizes:
         C = N // 20
@@ -42,6 +44,12 @@ def main() -> dict:
             us = 1e6 * (time.perf_counter() - t0) / t_use
             row[name] = us
             csv_row(f"complexity/N={N}/{name}", us, f"C={C}")
+        # the scan-compiled batched data plane (B=1000); first call compiles,
+        # second measures the steady state
+        replay_trace(trace, N, C, batch=B_scan, seed=13)
+        m = replay_trace(trace, N, C, batch=B_scan, seed=13)
+        row["OGB_scan_B1000"] = m.us_per_request
+        csv_row(f"complexity/N={N}/OGB_scan_B1000", m.us_per_request, f"C={C}")
         out[N] = row
         print(
             f"N={N:>10,}: "

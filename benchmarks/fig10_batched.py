@@ -2,17 +2,16 @@
 
 cdn-like traffic is insensitive to B (items re-requested throughout);
 twitter-like traffic loses hits once B exceeds the burst lifetime.
-Fractional rewards computed with the vectorized JAX engine (repro.jaxcache)."""
+Fractional rewards computed with the scan-compiled replay engine
+(repro.cachesim.replay) — the whole B-sweep runs on device."""
 
 from __future__ import annotations
 
 import numpy as np
 
-import jax.numpy as jnp
-
+from repro.cachesim.replay import replay_trace
 from repro.cachesim.traces import bursty, zipf
 from repro.core.ogb import theoretical_eta
-from repro.jaxcache.fractional import FractionalState, ogb_batch_update
 
 from .common import csv_row, save_json, scale, timed
 
@@ -20,14 +19,10 @@ from .common import csv_row, save_json, scale, timed
 def run_fractional(trace: np.ndarray, N: int, C: int, B: int) -> float:
     T = len(trace)
     eta = theoretical_eta(C, N, T, B)
-    state = FractionalState.create(N, C)
-    reward = 0.0
-    n_batches = T // B
-    for i in range(n_batches):
-        ids = jnp.asarray(trace[i * B : (i + 1) * B], jnp.int32)
-        state, r = ogb_batch_update(state, ids, jnp.float32(eta), C)
-        reward += float(r)
-    return reward / (n_batches * B)
+    m = replay_trace(
+        trace, N, C, batch=B, eta=eta, sample="none", track_opt=False
+    )
+    return m.frac_hit_ratio
 
 
 def main() -> dict:

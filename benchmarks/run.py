@@ -23,6 +23,7 @@ from . import (
     fig9_occupancy,
     fig10_batched,
     fig11_locality,
+    throughput,
 )
 
 SUITES = {
@@ -35,6 +36,7 @@ SUITES = {
     "fig11": fig11_locality.main,
     "complexity": complexity_scaling.main,
     "kernels": kernel_sweeps.main,
+    "throughput": throughput.main,
 }
 
 

@@ -43,30 +43,52 @@ def simulate(
     record_cum: bool = True,
 ) -> SimResult:
     T = len(trace)
-    cum = np.empty(T, dtype=np.int64) if record_cum else np.empty(0, dtype=np.int64)
+    # the hot loop avoids all per-request numpy traffic: the trace becomes a
+    # plain python list once (no per-step scalar boxing), per-request hit
+    # flags land in a bytearray (C-speed stores), and cumulative sums are one
+    # vectorized pass at the end
+    ids = trace.tolist() if isinstance(trace, np.ndarray) else list(trace)
+    hitbuf = bytearray(T)
     occ: List[float] = []
-    hits = 0
-    t0 = time.perf_counter()
     req = policy.request
-    for t in range(T):
-        hits += req(int(trace[t]))
-        if record_cum:
-            cum[t] = hits
-        if occupancy_every and (t + 1) % occupancy_every == 0:
-            occ.append(float(policy.occupancy()))
+    t0 = time.perf_counter()
+    if occupancy_every:
+        pos = 0
+        while pos < T:
+            end = min(pos + occupancy_every, T)
+            for t in range(pos, end):
+                hitbuf[t] = req(ids[t])
+            if end - pos == occupancy_every:
+                occ.append(float(policy.occupancy()))
+            pos = end
+    else:
+        t = 0
+        for j in ids:
+            hitbuf[t] = req(j)
+            t += 1
     # flush a trailing partial batch so final state is consistent
     if hasattr(policy, "batch_end"):
         policy.batch_end()
     wall = time.perf_counter() - t0
 
+    flags = np.frombuffer(hitbuf, dtype=np.uint8)  # zero-copy view, read-only use
+    hits = int(flags.sum())
+    cum = (
+        np.cumsum(flags, dtype=np.int64)
+        if record_cum
+        else np.empty(0, dtype=np.int64)
+    )
+
     n_win = max(T // window, 1)
     w = min(window, T)
-    if record_cum:
-        boundary = cum[w - 1 :: w][:n_win]
+    if T:
+        boundary = np.cumsum(
+            flags[: n_win * w].reshape(n_win, w).sum(axis=1, dtype=np.int64)
+        )
         prev = np.concatenate([[0], boundary[:-1]])
         windowed = (boundary - prev) / w
     else:
-        windowed = np.array([hits / max(T, 1)])
+        windowed = np.array([0.0])
     return SimResult(
         name=getattr(policy, "name", type(policy).__name__),
         T=T,

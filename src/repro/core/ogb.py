@@ -55,7 +55,7 @@ def theoretical_regret_bound(C: int, N: int, T: int, B: int = 1) -> float:
     return math.sqrt(C * (1.0 - C / N) * T * B)
 
 
-@dataclass
+@dataclass(slots=True)
 class OGBStats:
     requests: int = 0
     hits: int = 0
@@ -72,6 +72,14 @@ class OGB:
     """The paper's O(log N) integral no-regret caching policy."""
 
     name = "OGB"
+
+    __slots__ = (
+        "N", "C", "B", "eta", "seed", "_rng", "redraw_period", "stats",
+        "rho", "f_tilde", "z", "_f0", "lazy_init", "store_kind",
+        "_touched", "_n_virgin",
+        "p", "cached", "d", "_d_key", "_touched_sample", "rho_sample",
+        "_batch",
+    )
 
     def __init__(
         self,
@@ -105,6 +113,7 @@ class OGB:
         # --- probability state (Algorithm 2) ---
         self.rho = 0.0
         self.f_tilde: Dict[int, float] = {}
+        self.store_kind = store_kind
         self.z = make_store(store_kind, seed=seed + 1)
         self._f0 = self.C / self.N
         self.lazy_init = lazy_init
@@ -178,49 +187,54 @@ class OGB:
         ``weight`` implements the paper's general reward w_{t,j} (e.g. the
         retrieval cost of item j): the ascent step becomes eta * w_{t,j}.
         """
-        if self._n_virgin > 0 and self._virgin_value() <= 1e-15:
-            self._n_virgin = 0  # the untouched group decayed to zero: retire it
-        if self.lazy_init and self._is_virgin(j):
-            # materialize j out of the virgin group
-            self._n_virgin -= 1
-            self._touched.add(j)
-            self.f_tilde[j] = self._f0
-            self.z.insert(self._f0, j)
+        f_tilde = self.f_tilde
+        z = self.z
+        rho = self.rho
+        if self._n_virgin > 0:
+            if self._f0 - rho <= 1e-15:
+                self._n_virgin = 0  # the untouched group decayed to zero
+            elif j not in self._touched:
+                # materialize j out of the virgin group
+                self._n_virgin -= 1
+                f_tilde[j] = self._f0
+                z.insert(self._f0, j)
         self._touched.add(j)
 
-        fj_old = self.value(j)
+        ftj = f_tilde.get(j)
+        fj_old = min(ftj - rho, 1.0) if ftj is not None else 0.0
         if fj_old >= 1.0 - 1e-12:
             return  # paper lines 1-2: saturated component, projection is identity
 
         step = self.eta * weight
         # gradient step on coordinate j
-        if j in self.f_tilde:
-            self.z.remove(self.f_tilde[j], j)
-            new_key = self.f_tilde[j] + step
+        if ftj is not None:
+            z.remove(ftj, j)
+            new_key = ftj + step
         else:
-            new_key = self.rho + step  # f_j: 0 -> eta*w (unadjusted key)
-        self.f_tilde[j] = new_key
-        self.z.insert(new_key, j)
+            new_key = rho + step  # f_j: 0 -> eta*w (unadjusted key)
+        f_tilde[j] = new_key
+        z.insert(new_key, j)
 
         # ---- zero-pop loop (paper lines 11-18) ----
         popped, tau, virgin_popped = self._zero_pop_loop(step)
 
         # ---- one-clip corner case (paper lines 19-24): can fire at most once ----
-        if self.f_tilde[j] - self.rho - tau > 1.0 + 1e-12:
+        if new_key - rho - tau > 1.0 + 1e-12:
             self.stats.one_clip_events += 1
             for key, i in popped:  # RestoreRemoved()
-                self.z.insert(key, i)
-            self.z.remove(self.f_tilde[j], j)
+                z.insert(key, i)
+            z.remove(new_key, j)
             popped, tau, virgin_popped = self._zero_pop_loop(1.0 - fj_old)
-            self.rho += tau
-            self.f_tilde[j] = 1.0 + self.rho  # clipped at exactly 1
-            self.z.insert(self.f_tilde[j], j)
+            rho += tau
+            self.rho = rho
+            f_tilde[j] = 1.0 + rho  # clipped at exactly 1
+            z.insert(1.0 + rho, j)
         else:
-            self.rho += tau
+            self.rho = rho + tau
 
         # commit: popped coordinates are now exactly 0
         for _key, i in popped:
-            self.f_tilde.pop(i, None)
+            f_tilde.pop(i, None)
         self.stats.zero_pops += len(popped)
         if virgin_popped:
             self.stats.zero_pops += self._n_virgin
@@ -278,41 +292,46 @@ class OGB:
         self._d_key[i] = di
         self.stats.insertions += 1
 
+    def _update_sample_item(self, j: int) -> None:
+        was_implicit = self._implicitly_cached(j)
+        self._touched_sample.add(j)
+        ftj = self.f_tilde.get(j)
+        keep = ftj is not None and ftj - self.rho >= self._perm_rand(j)
+        old = self._d_key.pop(j, None)  # cached <=> has a d entry
+        if old is not None:
+            self.d.remove(old, j)
+            if keep:
+                dj = ftj - self.p[j]
+                self.d.insert(dj, j)
+                self._d_key[j] = dj
+            else:  # f_j dropped below p_j (or hit zero) during the batch
+                self.cached.remove(j)
+                self.stats.evictions += 1
+        else:
+            if keep:
+                self._admit(j, ftj)
+                if was_implicit:
+                    self.stats.insertions -= 1  # it was already resident
+            elif was_implicit:
+                self.stats.evictions += 1
+
     def update_sample(self, requested: List[int]) -> None:
         """Resample the cache content (runs once every B requests)."""
         self.stats.sample_updates += 1
-        for j in set(requested):
-            was_implicit = self._implicitly_cached(j)
-            self._touched_sample.add(j)
-            in_cache = j in self.cached
-            active = j in self.f_tilde
-            if in_cache:
-                old = self._d_key.pop(j)
-                self.d.remove(old, j)
-                if active and self.f_tilde[j] - self.rho >= self._perm_rand(j):
-                    dj = self.f_tilde[j] - self._perm_rand(j)
-                    self.d.insert(dj, j)
-                    self._d_key[j] = dj
-                else:  # f_j dropped below p_j (or hit zero) during the batch
-                    self.cached.remove(j)
-                    self.stats.evictions += 1
-            else:
-                if active and self.f_tilde[j] - self.rho >= self._perm_rand(j):
-                    self._admit(j, self.f_tilde[j])
-                    if was_implicit:
-                        self.stats.insertions -= 1  # it was already resident
-                elif was_implicit:
-                    self.stats.evictions += 1
+        for j in (requested if len(requested) <= 1 else set(requested)):
+            self._update_sample_item(j)
         # evict every cached item whose difference fell below rho
-        while len(self.d) > 0:
-            dmin, i = self.d.min()
-            if dmin >= self.rho:
+        rho = self.rho
+        d = self.d
+        while len(d) > 0:
+            dmin, i = d.min()
+            if dmin >= rho:
                 break
-            self.d.pop_min()
+            d.pop_min()
             self._d_key.pop(i, None)
             self.cached.discard(i)
             self.stats.evictions += 1
-        self.rho_sample = self.rho
+        self.rho_sample = rho
         if (
             self.redraw_period is not None
             and self.stats.sample_updates % self.redraw_period == 0
@@ -323,7 +342,7 @@ class OGB:
         """Optional periodic redraw of p (paper §5.1). Requires eager init."""
         self.seed = self._rng.randrange(1 << 62)
         self.p.clear()
-        self.d = make_store("sorted", seed=self.seed + 2)
+        self.d = make_store(self.store_kind, seed=self.seed + 2)
         self._d_key.clear()
         survivors: Set[int] = set()
         for i in list(self.cached):
@@ -350,14 +369,21 @@ class OGB:
 
     def request(self, i: int, weight: float = 1.0) -> bool:
         """Serve one request; returns integral hit/miss. Updates everything."""
-        hit = self.contains(i)
-        self.stats.requests += 1
-        self.stats.hits += int(hit)
-        self.stats.fractional_reward += weight * min(max(self.value(i), 0.0), 1.0)
+        stats = self.stats
+        hit = i in self.cached or self._implicitly_cached(i)
+        stats.requests += 1
+        if hit:
+            stats.hits += 1
+        v = self.value(i)
+        if v > 0.0:
+            stats.fractional_reward += weight * (v if v <= 1.0 else 1.0)
         self.update_probabilities(i, weight=weight)
-        self._batch.append(i)
-        if len(self._batch) >= self.B:
-            self.batch_end()
+        if self.B == 1:
+            self.update_sample((i,))  # inlined single-item batch: no list churn
+        else:
+            self._batch.append(i)
+            if len(self._batch) >= self.B:
+                self.batch_end()
         return hit
 
     def batch_end(self) -> None:

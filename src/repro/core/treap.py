@@ -33,6 +33,43 @@ try:  # pragma: no cover - import guard
 except Exception:  # pragma: no cover
     _HAVE_SORTEDCONTAINERS = False
 
+    import bisect
+
+    class SortedList:  # type: ignore[no-redef]
+        """Minimal bisect-backed fallback with SortedList's used surface.
+
+        O(n) insertion/removal (list shifting) — correct but slow; production
+        runs should prefer the treap engine (``make_store`` already falls back
+        to it) or install sortedcontainers.
+        """
+
+        def __init__(self):
+            self._l = []
+
+        def __len__(self):
+            return len(self._l)
+
+        def __getitem__(self, i):
+            return self._l[i]
+
+        def __iter__(self):
+            return iter(self._l)
+
+        def add(self, v):
+            bisect.insort(self._l, v)
+
+        def remove(self, v):
+            i = bisect.bisect_left(self._l, v)
+            if i == len(self._l) or self._l[i] != v:
+                raise ValueError(f"{v!r} not in list")
+            del self._l[i]
+
+        def pop(self, i=-1):
+            return self._l.pop(i)
+
+        def bisect_left(self, v):
+            return bisect.bisect_left(self._l, v)
+
 
 class _Node:
     __slots__ = ("key", "item", "prio", "left", "right", "size")
@@ -186,8 +223,6 @@ class SortedKeyStore:
     """sortedcontainers-backed drop-in with the same API as :class:`Treap`."""
 
     def __init__(self, seed: int = 0):  # seed ignored; signature parity
-        if not _HAVE_SORTEDCONTAINERS:  # pragma: no cover
-            raise RuntimeError("sortedcontainers not available")
         self._sl = SortedList()
 
     def __len__(self) -> int:

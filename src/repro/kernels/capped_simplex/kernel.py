@@ -20,6 +20,26 @@ Kernels:
 
 Blocks are (block_rows, 128) f32: 128-lane aligned for the VPU; the default
 (256, 128) keeps f+counts+K-chunk intermediates well under VMEM (~1 MiB).
+
+Warm-start invariant (used by ``ops.fused_ogb_update(tau0=...)`` and the
+scan-replay engine): for a *feasible* pre-step state f (sum f = C,
+0 <= f <= 1) and y = f + eta*counts with counts >= 0, the projection
+threshold satisfies
+
+    0 <= tau <= eta * sum(counts)
+
+because g(0) = sum(clip(y, 0, 1)) >= sum(f) = C (each coordinate can only
+grow) and g(eta*sum(counts)) <= sum(f) = C (no coordinate grew by more than
+the total step).  K-way bracketing over that width-(eta*B) interval needs
+``passes=2`` instead of 3+ over width (1 + eta*B).  Note the *per-step*
+threshold is NOT monotone across chained projections of the re-projected f
+(only the cumulative threshold rho_t = sum_{s<=t} tau_s of the lazy,
+accumulated-y formulation is), so the previous step's tau is a valid
+initial *guess* but never a valid lower bracket — the scan replay seeds its
+bracketed-Newton solver with it inside the provable [0, eta*B] bracket
+(``repro.jaxcache.fractional.capped_simplex_project_warm``).  Cold bisection
+to the same accuracy costs ~50 catalog sweeps; the warm forms need single
+digits.
 """
 
 from __future__ import annotations

@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -12,7 +13,15 @@ from .kernel import DEFAULT_BLOCK_ROWS, DEFAULT_K, LANES, _grid_apply, _grid_mas
 
 @functools.partial(
     jax.jit,
-    static_argnames=("eta", "capacity", "passes", "k", "block_rows", "interpret"),
+    static_argnames=(
+        "eta",
+        "capacity",
+        "passes",
+        "k",
+        "block_rows",
+        "interpret",
+        "return_tau",
+    ),
 )
 def fused_ogb_update(
     f: jax.Array,
@@ -22,17 +31,38 @@ def fused_ogb_update(
     passes: int = 3,
     k: int = DEFAULT_K,
     block_rows: int = DEFAULT_BLOCK_ROWS,
-    interpret: bool = True,
-) -> jax.Array:
+    interpret: Optional[bool] = None,
+    tau0: Optional[jax.Array] = None,
+    hi: Optional[jax.Array] = None,
+    return_tau: bool = False,
+):
     """f' = Proj_F(f + eta * counts) via K-way bracketing Pallas kernels.
 
     ``passes`` sweeps of the K-candidate mass kernel narrow tau to a bracket
     of width (hi-lo)/(K-1)^passes, then a piecewise-linear interpolation
     (exact when the final bracket contains no clip breakpoint) produces tau.
 
+    Warm start (``tau0``/``hi``): ``tau0`` must be a valid *lower bound* on
+    the threshold and ``hi`` an upper bound.  For a feasible ``f`` (sum f =
+    C, 0 <= f <= 1) the per-step threshold provably lies in
+    [0, eta * sum(counts)] — pass ``tau0=0.0`` to get that bracket (``hi``
+    is then derived automatically), shrinking the initial bracket from
+    O(1 + eta*B) to O(eta*B) so ``passes=2`` usually suffices.  Do NOT pass
+    the previous step's tau when chaining projections of the re-projected
+    ``f``: the per-step threshold is not monotone (only the cumulative
+    threshold of the *accumulated*, never-re-projected y is), and an invalid
+    lower bound silently yields an infeasible result.  A nonzero ``tau0`` is
+    only correct when the caller maintains that accumulated-y formulation.
+
+    ``interpret=None`` auto-selects: compiled Pallas on TPU, interpreter
+    elsewhere.  ``return_tau=True`` additionally returns the threshold so
+    callers can chain warm starts.
+
     Memory traffic: (passes+1) catalog sweeps instead of ~50 for plain
     bisection — the headline Pallas win for this memory-bound op.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     n = f.shape[0]
     dtype = f.dtype
     block = block_rows * LANES
@@ -40,8 +70,17 @@ def fused_ogb_update(
     f2 = jnp.pad(f, (0, pad)).reshape(-1, LANES)
     c2 = jnp.pad(counts, (0, pad)).reshape(-1, LANES)
 
-    lo = jnp.zeros((), jnp.float32)
-    hi = (1.0 + eta * jnp.sum(counts)).astype(jnp.float32)
+    if tau0 is None:
+        lo = jnp.zeros((), jnp.float32)
+        if hi is None:
+            hi = (1.0 + eta * jnp.sum(counts)).astype(jnp.float32)
+    else:
+        lo = jnp.asarray(tau0, jnp.float32)
+        if hi is None:
+            from repro.jaxcache.fractional import warm_bracket_hi
+
+            hi = lo + warm_bracket_hi(eta * jnp.sum(counts))
+    hi = jnp.asarray(hi, jnp.float32)
     cap = jnp.float32(capacity)
 
     g_lo = None
@@ -67,4 +106,7 @@ def fused_ogb_update(
     ).astype(jnp.float32)
 
     out2 = _grid_apply(f2, c2, tau, eta, block_rows, interpret)
-    return out2.reshape(-1)[:n].astype(dtype)
+    out = out2.reshape(-1)[:n].astype(dtype)
+    if return_tau:
+        return out, tau
+    return out

@@ -1,0 +1,97 @@
+"""Minimal stand-in for ``hypothesis`` when it isn't installed.
+
+Implements just the surface the OGB property tests use — ``@given`` with
+keyword strategies, ``@settings(max_examples=..., deadline=...)`` and the
+``integers`` / ``floats`` / ``booleans`` strategies — by drawing examples from
+a deterministically seeded RNG.  No shrinking, no database: a failing example
+is reported with its drawn values so it can be reproduced by hand.  The real
+hypothesis is preferred whenever importable.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+from typing import Any, Callable, Dict
+
+_DEFAULT_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(lambda rng: rng.choice(seq))
+
+    @staticmethod
+    def tuples(*strats: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+    @staticmethod
+    def lists(
+        elements: _Strategy, min_size: int = 0, max_size: int = 10
+    ) -> _Strategy:
+        def draw(rng: random.Random):
+            size = rng.randint(min_size, max_size)
+            return [elements.draw(rng) for _ in range(size)]
+
+        return _Strategy(draw)
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats: _Strategy):
+    def deco(fn):
+        max_examples = getattr(fn, "_stub_max_examples", _DEFAULT_EXAMPLES)
+
+        @functools.wraps(fn)
+        def wrapper():
+            # crc32, not hash(): str hashes are salted per process, and drawn
+            # examples must be reproducible across runs
+            rng = random.Random(0xC0FFEE ^ zlib.crc32(fn.__name__.encode()))
+            for n in range(max_examples):
+                drawn: Dict[str, Any] = {
+                    name: s.draw(rng) for name, s in strats.items()
+                }
+                try:
+                    fn(**drawn)
+                except Exception as e:  # pragma: no cover - failure path
+                    raise AssertionError(
+                        f"{fn.__name__} failed on example {n}: {drawn!r}"
+                    ) from e
+
+        # pytest must see a zero-arg signature, not the wrapped one (it would
+        # otherwise look for fixtures named after the strategy kwargs)
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco

@@ -1,0 +1,43 @@
+"""The ordered-store engine must survive a permanent-number redraw.
+
+Regression test: ``_redraw_permanent_numbers`` used to rebuild ``d`` with a
+hardcoded ``make_store("sorted")``, silently switching treap-backed runs onto
+a different structure mid-run.
+"""
+
+import numpy as np
+
+from repro.core.ogb import OGB
+from repro.core.treap import SortedKeyStore, Treap
+
+
+def _drive(ogb, T=60, seed=0):
+    rng = np.random.default_rng(seed)
+    for j in rng.integers(0, ogb.N, size=T):
+        ogb.request(int(j))
+
+
+def test_redraw_preserves_treap_engine():
+    ogb = OGB(
+        50, 5, eta=0.1, store_kind="treap", lazy_init=False, redraw_period=3
+    )
+    assert isinstance(ogb.d, Treap)
+    _drive(ogb)
+    assert ogb.stats.sample_updates >= 3  # at least one redraw happened
+    assert isinstance(ogb.d, Treap), "redraw switched the ordered-store engine"
+    ogb.check_invariants()
+
+
+def test_redraw_preserves_sorted_engine():
+    ogb = OGB(
+        50, 5, eta=0.1, store_kind="sorted", lazy_init=False, redraw_period=3
+    )
+    kind = type(ogb.d)
+    _drive(ogb)
+    assert type(ogb.d) is kind
+    ogb.check_invariants()
+
+
+def test_store_kind_attribute_persisted():
+    assert OGB(20, 2, eta=0.1, store_kind="treap").store_kind == "treap"
+    assert OGB(20, 2, eta=0.1).store_kind == "sorted"

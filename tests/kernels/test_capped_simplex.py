@@ -5,7 +5,7 @@ import pytest
 
 import jax.numpy as jnp
 
-from repro.core.projection import project_capped_simplex
+from repro.core.projection import capped_simplex_tau, project_capped_simplex
 from repro.kernels.capped_simplex.ops import fused_ogb_update
 from repro.kernels.capped_simplex.ref import fused_ogb_update_ref
 
@@ -67,6 +67,32 @@ def test_pass_count_accuracy(passes, k):
     )
     expect = project_capped_simplex(f.astype(np.float64) + eta * counts, C)
     np.testing.assert_allclose(np.asarray(got), expect, atol=5e-4)
+
+
+def test_warm_bracket_matches_cold_and_returns_tau():
+    """tau0 warm bracket: 2 passes match the cold 3-pass result and the
+    float64 oracle's threshold (the f from _mk is feasible, so tau lies in
+    [0, eta*sum(counts)])."""
+    f, counts, C = _mk(20000, 512, 7, np.float32)
+    eta = 0.02
+    cold = fused_ogb_update(
+        jnp.asarray(f), jnp.asarray(counts), eta, float(C), interpret=True
+    )
+    warm, tau = fused_ogb_update(
+        jnp.asarray(f),
+        jnp.asarray(counts),
+        eta,
+        float(C),
+        passes=2,
+        tau0=jnp.float32(0.0),
+        return_tau=True,
+        interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(warm), np.asarray(cold), atol=2e-4)
+    expect = project_capped_simplex(f.astype(np.float64) + eta * counts, C)
+    np.testing.assert_allclose(np.asarray(warm), expect, atol=2e-4)
+    tau_ref = capped_simplex_tau(f.astype(np.float64) + eta * counts, C)
+    assert abs(float(tau) - tau_ref) < 1e-4
 
 
 def test_large_eta_saturation():
