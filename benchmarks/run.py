@@ -52,15 +52,16 @@ SUITES["roofline"] = _roofline
 
 def main() -> None:
     wanted = sys.argv[1:] or list(SUITES)
+    # a typo'd suite name must fail the run, not silently skip the suite
+    unknown = [n for n in wanted if n not in SUITES]
+    if unknown:
+        print(f"unknown suites {unknown}; available: {sorted(SUITES)}")
+        raise SystemExit(2)
     failures = []
     for name in wanted:
-        fn = SUITES.get(name)
-        if fn is None:
-            print(f"unknown suite {name!r}; available: {sorted(SUITES)}")
-            continue
         print(f"\n=== {name} " + "=" * (70 - len(name)))
         try:
-            fn()
+            SUITES[name]()
         except Exception as e:
             failures.append((name, e))
             traceback.print_exc()

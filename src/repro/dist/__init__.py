@@ -1,0 +1,50 @@
+"""Distributed-execution helpers: logical sharding, pytree resolvers, faults.
+
+Split by concern:
+
+  * :mod:`repro.dist.sharding` — the context-managed (mesh, rules) registry
+    and the :func:`~repro.dist.sharding.shard` activation annotation.
+  * :mod:`repro.dist.param_sharding` — name-based pytree resolvers producing
+    ``NamedSharding`` trees for params / optimizer state / batches / caches,
+    with ZeRO-3 above :data:`~repro.dist.param_sharding.FSDP_THRESHOLD`.
+  * :mod:`repro.dist.fault` — straggler / heartbeat monitoring for launches.
+"""
+
+from .fault import FaultConfig, StragglerMonitor
+from .param_sharding import (
+    FSDP_THRESHOLD,
+    batch_shardings,
+    cache_shardings,
+    is_fsdp,
+    param_shardings,
+    state_shardings,
+)
+from .sharding import (
+    ShardingRules,
+    current_mesh,
+    current_rules,
+    default_rules,
+    logical_to_spec,
+    named_sharding,
+    shard,
+    use_sharding,
+)
+
+__all__ = [
+    "FSDP_THRESHOLD",
+    "FaultConfig",
+    "ShardingRules",
+    "StragglerMonitor",
+    "batch_shardings",
+    "cache_shardings",
+    "current_mesh",
+    "current_rules",
+    "default_rules",
+    "is_fsdp",
+    "logical_to_spec",
+    "named_sharding",
+    "param_shardings",
+    "shard",
+    "state_shardings",
+    "use_sharding",
+]

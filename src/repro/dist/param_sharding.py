@@ -1,0 +1,189 @@
+"""Pytree sharding resolvers: params, optimizer state, batches, KV caches.
+
+Each resolver walks a pytree of ``ShapeDtypeStruct``s (or arrays) and returns
+a matching pytree of ``NamedSharding``s for ``jax.jit(in_shardings=...)``.
+Resolution is *name-based*: the last dict key on a leaf's path selects a
+logical-axis tuple for the leaf's trailing dims (leading dims are the scanned
+layer stack and stay replicated), then ``logical_to_spec`` maps it onto the
+mesh with the usual divisibility / axis-reuse drops.
+
+FSDP (ZeRO-3): architectures above :data:`FSDP_THRESHOLD` parameters
+additionally shard the weight dims that are replicated under pure TP — the
+``"embed"`` (d_model) dim of every matmul weight and the ``"moe_ff"`` expert
+hidden dim — over the "data" axis.  Below the threshold those dims stay
+replicated and "data" carries only the batch.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+from .sharding import ShardingRules, default_rules, logical_to_spec
+
+# Parameter count above which params/moments get ZeRO-3 sharded over "data".
+# 20B: the same boundary the launchers use to drop optimizer moments to bf16
+# — kimi-k2 (1T) and jamba (398B) land above, every dense <=14B arch below.
+FSDP_THRESHOLD = 2e10
+
+# Logical axes for the *trailing* dims of each named weight.  "embed" /
+# "moe_ff" resolve to None under pure TP and to "data" under FSDP.
+_PARAM_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings / heads
+    "embed": ("vocab", "embed"),
+    "lm_head": ("embed", "vocab"),
+    "enc_pos": (None, "embed"),
+    "dec_pos": (None, "embed"),
+    # attention
+    "wq": ("embed", "heads"),
+    "wk": ("embed", "kv_heads"),
+    "wv": ("embed", "kv_heads"),
+    "wo": ("heads", "embed"),
+    # dense MLP
+    "w_gate": ("embed", "ff"),
+    "w_up": ("embed", "ff"),
+    "w_down": ("ff", "embed"),
+    # MoE router (expert weights handled by _MOE_AXES)
+    "router": ("embed", None),
+    # Mamba
+    "w_in": ("embed", "ff"),
+    "conv_w": (None, "ff"),
+    "w_bc": ("ff", None),
+    "w_dt": ("ff", None),
+    "A_log": ("ff", None),
+    "w_out": ("ff", "embed"),
+    # RWKV
+    "w_r": ("embed", "ff"),
+    "w_k": ("embed", "ff"),
+    "w_v": ("embed", "ff"),
+    "w_g": ("embed", "ff"),
+    "w_o": ("ff", "embed"),
+    "w_ck": ("embed", "ff"),
+    "w_cv": ("ff", "embed"),
+    "w_cr": ("embed", "ff"),
+    "w_lora_a": ("embed", None),
+    "w_lora_b": (None, "embed"),
+}
+
+# Expert-parallel weights (E, d, f) / (E, f, d): experts over "model", the
+# hidden dim over "data" under FSDP (the F~data layout moe_forward's decode
+# path matches with shard(h, ..., "fsdp")).  The d_model dim must stay
+# replicated here — giving it "embed" would consume the "data" axis first
+# and the axis-reuse drop would silently replicate F instead.
+_MOE_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "w_gate": ("experts", None, "moe_ff"),
+    "w_up": ("experts", None, "moe_ff"),
+    "w_down": ("experts", "moe_ff", None),
+    "router": ("embed", None),
+}
+
+# Decode-cache leaves: (logical axes for trailing dims, right-aligned).
+_CACHE_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "k": ("batch", "kv_seq", "kv_heads", None),
+    "v": ("batch", "kv_seq", "kv_heads", None),
+    "k_scale": ("batch", "kv_seq", "kv_heads"),
+    "v_scale": ("batch", "kv_seq", "kv_heads"),
+    "cross_k": ("batch", None, "kv_heads", None),
+    "cross_v": ("batch", None, "kv_heads", None),
+    "tm_x": ("batch", None),
+    "tm_s": ("batch", None, None, None),
+    "cm_x": ("batch", None),
+    "conv": ("batch", None, "ff"),
+    "ssm": ("batch", "ff", None),
+    "pos": (),
+}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    """Dict-key names along a tree path (attr/sequence keys skipped)."""
+    names = []
+    for entry in path:
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            names.append(key)
+        else:
+            name = getattr(entry, "name", None)
+            if isinstance(name, str):
+                names.append(name)
+    return tuple(names)
+
+
+def is_fsdp(cfg) -> bool:
+    """Strictly above the threshold: the boundary arch stays pure TP/DP."""
+    return cfg.param_count() > FSDP_THRESHOLD
+
+
+def _rules_for(cfg, mesh, rules: Optional[ShardingRules]) -> ShardingRules:
+    if rules is None:
+        rules = default_rules(multi_pod="pod" in mesh.axis_names)
+    if cfg is not None and is_fsdp(cfg):
+        rules = rules.with_overrides(embed="data", moe_ff="data")
+    return rules
+
+
+def _aligned_spec(axes: Sequence[Optional[str]], leaf, rules, sizes):
+    """Right-align trailing-dim axes; leading (stacked) dims replicate."""
+    ndim = len(leaf.shape)
+    if len(axes) > ndim:  # leaf smaller than the table entry: replicate
+        axes = ()
+    full = (None,) * (ndim - len(axes)) + tuple(axes)
+    return logical_to_spec(full, rules, sizes, leaf.shape)
+
+
+def param_shardings(cfg, params_shape: Any, mesh, rules: Optional[ShardingRules] = None):
+    """NamedSharding pytree for a (possibly layer-stacked) parameter tree."""
+    rules = _rules_for(cfg, mesh, rules)
+    sizes = dict(mesh.shape)
+
+    def resolve(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        table = _MOE_AXES if "moe" in names[:-1] else _PARAM_AXES
+        axes = table.get(name, ())
+        return NamedSharding(mesh, _aligned_spec(axes, leaf, rules, sizes))
+
+    return jax.tree_util.tree_map_with_path(resolve, params_shape)
+
+
+def state_shardings(cfg, state_shape: Any, mesh, rules: Optional[ShardingRules] = None):
+    """Shardings for a TrainState: moments follow their parameters.
+
+    Works because the optimizer mirrors the parameter tree leaf-for-leaf, so
+    the same name-based resolution applies; non-parameter leaves (step
+    counters, scalars) fall through to replicated.
+    """
+    return param_shardings(cfg, state_shape, mesh, rules)
+
+
+def batch_shardings(mesh, specs: Any, rules: Optional[ShardingRules] = None):
+    """Data-parallel input shardings: leading dim over "batch", rest replicated."""
+    rules = _rules_for(None, mesh, rules)
+    sizes = dict(mesh.shape)
+
+    def resolve(leaf):
+        ndim = len(leaf.shape)
+        axes = ("batch",) + (None,) * (ndim - 1) if ndim else ()
+        return NamedSharding(mesh, logical_to_spec(axes, rules, sizes, leaf.shape))
+
+    return jax.tree_util.tree_map(resolve, specs)
+
+
+def cache_shardings(cfg, cache_shape: Any, mesh, rules: Optional[ShardingRules] = None):
+    """Decode-cache shardings: batch-sharded KV/SSM state, replicated pos.
+
+    Cache leaves carry stacked leading layer dims (``(L, B, ...)`` or
+    ``(n_blocks, period-1, B, ...)``); the name table right-aligns onto the
+    trailing dims so the batch dim is found regardless of stack depth.
+    """
+    rules = _rules_for(cfg, mesh, rules)
+    sizes = dict(mesh.shape)
+
+    def resolve(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        axes = _CACHE_AXES.get(name, ())
+        return NamedSharding(mesh, _aligned_spec(axes, leaf, rules, sizes))
+
+    return jax.tree_util.tree_map_with_path(resolve, cache_shape)

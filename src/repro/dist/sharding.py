@@ -1,0 +1,174 @@
+"""Context-managed mesh / logical-axis registry over ``jax.sharding``.
+
+Model code never names mesh axes directly.  It annotates activations with
+*logical* axis names (``"batch"``, ``"heads"``, ``"ff"``, ...) via
+:func:`shard`; a :class:`ShardingRules` table maps logical names to physical
+mesh axes, and :func:`use_sharding` installs a ``(mesh, rules)`` pair on a
+context stack.  Off-context (plain CPU tests, eager debugging) every
+annotation is a no-op, so the same model code runs unsharded.
+
+Resolution drops a logical axis instead of failing when
+
+  * the rules map it to ``None`` (explicitly replicated),
+  * the mesh doesn't carry the mapped axis (e.g. single-pod mesh with
+    multi-pod rules),
+  * the dimension isn't divisible by the mapped axes' total size (smoke
+    configs on test meshes), or
+  * the mesh axis is already consumed by an earlier dimension of the same
+    array (a PartitionSpec may use each mesh axis once).
+
+This mirrors how production GSPMD codebases treat logical annotations: hints,
+never hard constraints on toy shapes.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+Axis = Union[str, Tuple[str, ...], None]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Immutable logical-name -> mesh-axis table (``None`` = replicated)."""
+
+    rules: Mapping[str, Axis]
+
+    def mesh_axes(self, logical: Optional[str]) -> Tuple[str, ...]:
+        """Physical mesh axes for one logical name (possibly empty)."""
+        if logical is None:
+            return ()
+        mapped = self.rules.get(logical)
+        if mapped is None:
+            return ()
+        return (mapped,) if isinstance(mapped, str) else tuple(mapped)
+
+    def with_overrides(self, **overrides: Axis) -> "ShardingRules":
+        """New table with some logical names remapped (overrides win)."""
+        merged = dict(self.rules)
+        merged.update(overrides)
+        return ShardingRules(rules=merged)
+
+
+def default_rules(*, multi_pod: bool = False) -> ShardingRules:
+    """The production mapping onto a ("data", "model") / pod mesh.
+
+    DP over "data" (spanning pods when ``multi_pod``), TP over "model" for
+    heads / hidden / vocab / experts, ZeRO-3 ("fsdp") over "data".  GQA KV
+    heads and the KV sequence dim stay replicated: KV heads are few and the
+    decode cache is batch-sharded already.  "embed" / "moe_ff" are the
+    weight dims that FSDP resolution remaps to "data" above
+    ``FSDP_THRESHOLD`` (see param_sharding) — replicated by default.
+    """
+    return ShardingRules(
+        rules={
+            "batch": ("pod", "data") if multi_pod else "data",
+            "fsdp": "data",
+            "heads": "model",
+            "kv_heads": None,
+            "kv_seq": None,
+            "ff": "model",
+            "vocab": "model",
+            "experts": "model",
+            "embed": None,
+            "moe_ff": None,
+        }
+    )
+
+
+class _Context(threading.local):
+    def __init__(self):
+        self.stack = []
+
+
+_CTX = _Context()
+
+
+def current_mesh():
+    """Innermost active mesh, or None outside any use_sharding context."""
+    return _CTX.stack[-1][0] if _CTX.stack else None
+
+
+def current_rules() -> Optional[ShardingRules]:
+    """Innermost active rules, or None outside any use_sharding context."""
+    return _CTX.stack[-1][1] if _CTX.stack else None
+
+
+@contextmanager
+def use_sharding(mesh, rules: ShardingRules):
+    """Install (mesh, rules) for the dynamic extent of the block. Nests."""
+    _CTX.stack.append((mesh, rules))
+    try:
+        yield (mesh, rules)
+    finally:
+        _CTX.stack.pop()
+
+
+def logical_to_spec(
+    axes: Sequence[Optional[str]],
+    rules: ShardingRules,
+    axis_sizes: Mapping[str, int],
+    shape: Optional[Sequence[int]] = None,
+) -> PartitionSpec:
+    """Resolve per-dim logical names to a PartitionSpec.
+
+    ``axis_sizes`` is the mesh's name -> size mapping (``mesh.shape``); pass
+    ``shape`` to drop axes that don't divide the corresponding dimension.
+    """
+    used: set = set()
+    out = []
+    for d, logical in enumerate(axes):
+        mapped = tuple(
+            a for a in rules.mesh_axes(logical) if a in axis_sizes and a not in used
+        )
+        if mapped and shape is not None:
+            size = 1
+            for a in mapped:
+                size *= axis_sizes[a]
+            if size == 0 or shape[d] % size != 0:
+                mapped = ()
+        if not mapped:
+            out.append(None)
+            continue
+        used.update(mapped)
+        out.append(mapped[0] if len(mapped) == 1 else mapped)
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names; no-op off-context.
+
+    One name (or None) per dimension of ``x``.
+    """
+    # arity is validated even off-context so plain CPU tests catch it
+    if len(axes) != x.ndim:
+        raise ValueError(
+            f"shard() got {len(axes)} axis names for a rank-{x.ndim} array"
+        )
+    mesh, rules = current_mesh(), current_rules()
+    if mesh is None or rules is None:
+        return x
+    spec = logical_to_spec(axes, rules, dict(mesh.shape), x.shape)
+    if not spec:  # fully replicated constraint adds nothing
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(
+    mesh,
+    axes: Sequence[Optional[str]],
+    rules: Optional[ShardingRules] = None,
+    shape: Optional[Sequence[int]] = None,
+) -> NamedSharding:
+    """NamedSharding from logical names (helper for the pytree resolvers)."""
+    if rules is None:
+        rules = default_rules(multi_pod="pod" in mesh.axis_names)
+    return NamedSharding(mesh, logical_to_spec(axes, rules, dict(mesh.shape), shape))

@@ -18,17 +18,7 @@ except ImportError:
 
     sys.modules["hypothesis"] = _hypothesis_stub
 
-# The model/serving/training stack imports repro.dist (sharding-rule
-# helpers), which is absent from the seed snapshot.  Gate those test modules
-# instead of letting their import errors interrupt collection of the whole
-# suite — the caching stack (core, cachesim, jaxcache, kernels) does not
-# depend on repro.dist.
-try:
-    import repro.dist  # noqa: F401
-except ImportError:
-    collect_ignore_glob = ["models/*", "serve/*", "launch/*"]
-    collect_ignore = [
-        "test_system.py",
-        "train/test_train.py",
-        "train/test_checkpoint.py",
-    ]
+# repro.dist is a hard dependency of the model/serving/training stack and is
+# part of the library proper — no collection gating.  Genuinely optional deps
+# are handled per-module (the hypothesis shim above; pytest.importorskip at
+# the test site for anything else).

@@ -1,0 +1,101 @@
+"""Unit tests for StragglerMonitor / FaultConfig timeout accounting."""
+
+import pytest
+
+from repro.dist.fault import FaultConfig, StragglerMonitor
+
+
+def _cfg(**kw):
+    base = dict(straggler_factor=2.0, warmup_steps=2, ewma_alpha=0.5,
+                max_consecutive_stragglers=3)
+    base.update(kw)
+    return FaultConfig(**base)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        FaultConfig(straggler_factor=1.0)
+    with pytest.raises(ValueError):
+        FaultConfig(ewma_alpha=0.0)
+
+
+def test_steady_steps_never_flagged():
+    mon = StragglerMonitor(_cfg())
+    assert not any(mon.observe(i, 1.0) for i in range(20))
+    assert mon.n_stragglers == 0
+    assert mon.excess_s == 0.0
+    assert abs(mon.baseline_s - 1.0) < 1e-12
+
+
+def test_warmup_steps_never_flagged():
+    # the first (compile) step is routinely 100x the steady step
+    mon = StragglerMonitor(_cfg(warmup_steps=2))
+    assert not mon.observe(0, 100.0)
+    assert not mon.observe(1, 1.0)
+    assert mon.n_stragglers == 0
+    # warmup must not seed the baseline either
+    assert mon.baseline_s is None
+
+
+def test_warmup_compile_time_does_not_mask_stragglers():
+    """A 100x compile step must not inflate the threshold after warmup."""
+    mon = StragglerMonitor(_cfg(warmup_steps=1, ewma_alpha=0.1))
+    mon.observe(0, 100.0)  # compile
+    for i in range(1, 6):
+        assert not mon.observe(i, 1.0)
+    assert mon.baseline_s == pytest.approx(1.0)
+    # a genuinely sick step right after warmup is caught immediately
+    assert mon.observe(6, 5.0)
+
+
+def test_spike_flagged_with_excess_accounting():
+    mon = StragglerMonitor(_cfg())
+    for i in range(5):
+        mon.observe(i, 1.0)
+    baseline = mon.baseline_s
+    assert mon.observe(5, 5.0)  # 5.0 > 2.0 * 1.0
+    assert mon.n_stragglers == 1
+    assert mon.last_flagged_step == 5
+    # excess is time past the threshold, not past the baseline
+    assert mon.excess_s == pytest.approx(5.0 - 2.0 * baseline)
+    # the straggler must not contaminate the baseline
+    assert mon.baseline_s == pytest.approx(baseline)
+    # recovery resets the consecutive counter
+    assert not mon.observe(6, 1.0)
+    assert mon.consecutive_stragglers == 0
+
+
+def test_should_reschedule_on_sustained_slowdown():
+    mon = StragglerMonitor(_cfg(max_consecutive_stragglers=3))
+    for i in range(5):
+        mon.observe(i, 1.0)
+    for i in range(5, 8):
+        assert mon.observe(i, 10.0)
+    assert mon.consecutive_stragglers == 3
+    assert mon.should_reschedule()
+    assert mon.straggler_ratio == pytest.approx(3 / 8)
+
+
+def test_baseline_tracks_gradual_drift():
+    # a 5% slowdown per-step is drift, not straggling: EWMA follows it
+    mon = StragglerMonitor(_cfg(ewma_alpha=0.5))
+    d = 1.0
+    for i in range(30):
+        assert not mon.observe(i, d)
+        d *= 1.05
+    assert mon.n_stragglers == 0
+    assert mon.baseline_s > 1.5
+
+
+def test_heartbeat_accounting():
+    mon = StragglerMonitor(_cfg(heartbeat_timeout_s=1e9))
+    assert mon.seconds_since_heartbeat() is None
+    assert not mon.heartbeat_expired()  # never-beaten != expired
+    mon.heartbeat()
+    since = mon.seconds_since_heartbeat()
+    assert since is not None and since >= 0.0
+    assert not mon.heartbeat_expired()
+    # observe() is also a liveness signal
+    mon2 = StragglerMonitor(_cfg())
+    mon2.observe(0, 1.0)
+    assert mon2.seconds_since_heartbeat() is not None

@@ -1,0 +1,156 @@
+"""Unit tests for the name-based pytree sharding resolvers."""
+
+from types import SimpleNamespace
+
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import get_smoke
+from repro.dist.param_sharding import (
+    FSDP_THRESHOLD,
+    batch_shardings,
+    cache_shardings,
+    is_fsdp,
+    param_shardings,
+    state_shardings,
+)
+from repro.models.model import init_cache, init_params
+
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def _cfg_with_params(n):
+    return SimpleNamespace(param_count=lambda: n)
+
+
+def test_fsdp_threshold_boundary():
+    assert not is_fsdp(_cfg_with_params(FSDP_THRESHOLD - 1))
+    # exactly at the threshold: pure TP/DP (strict inequality)
+    assert not is_fsdp(_cfg_with_params(FSDP_THRESHOLD))
+    assert is_fsdp(_cfg_with_params(FSDP_THRESHOLD + 1))
+
+
+def test_fsdp_remaps_embed_dim_to_data():
+    mesh = _mesh()
+    wq = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    tree = {"attn": {"wq": wq}}
+    below = param_shardings(_cfg_with_params(1), tree, mesh)
+    above = param_shardings(_cfg_with_params(int(FSDP_THRESHOLD * 2)), tree, mesh)
+    # pure TP: d_model dim replicated, heads dim over "model"
+    assert below["attn"]["wq"].spec == P(None, "model")
+    # FSDP: d_model dim additionally sharded over "data"
+    assert above["attn"]["wq"].spec == P("data", "model")
+
+
+def test_param_shardings_smoke_model_structure_and_rules():
+    cfg = get_smoke("glm4-9b")
+    mesh = _mesh()
+    params_shape = jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+    sh = param_shardings(cfg, params_shape, mesh)
+    assert jax.tree_util.tree_structure(sh) == jax.tree_util.tree_structure(
+        params_shape
+    )
+    assert all(isinstance(s, NamedSharding) for s in jax.tree_util.tree_leaves(sh))
+    # embedding: vocab dim over "model"
+    assert sh["embed"].spec == P("model")
+    # stacked layer weights: leading L dim replicated, TP on trailing dims
+    assert sh["blocks"]["attn"]["wq"].spec == P(None, None, "model")
+    assert sh["blocks"]["attn"]["wo"].spec == P(None, "model")
+    assert sh["blocks"]["mlp"]["w_down"].spec == P(None, "model")
+    # GQA kv projections and norms stay replicated
+    assert sh["blocks"]["attn"]["wk"].spec == P()
+    assert sh["blocks"]["ln1"].spec == P()
+
+
+def test_fsdp_moe_hidden_dim_follows_data():
+    """Above the threshold, expert weights take the F~data (ZeRO-3) layout
+    moe_forward's decode path relies on — not d_model~data."""
+    mesh = _mesh()
+    tree = {
+        "moe": {
+            "w_gate": jax.ShapeDtypeStruct((8, 64, 32), jnp.float32),
+            "w_down": jax.ShapeDtypeStruct((8, 32, 64), jnp.float32),
+        }
+    }
+    sh = param_shardings(_cfg_with_params(int(FSDP_THRESHOLD * 2)), tree, mesh)
+    assert sh["moe"]["w_gate"].spec == P("model", None, "data")
+    assert sh["moe"]["w_down"].spec == P("model", "data")
+
+
+def test_moe_expert_weights_sharded_over_experts():
+    cfg = get_smoke("granite-moe-1b-a400m")
+    mesh = _mesh()
+    params_shape = jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+    sh = param_shardings(cfg, params_shape, mesh)
+    moe = sh["blocks"]["moe"]
+    # (L, E, d, f): experts over "model" (EP), hidden replicated below FSDP
+    assert moe["w_gate"].spec == P(None, "model")
+    assert moe["w_down"].spec == P(None, "model")
+    assert moe["router"].spec == P()
+
+
+def test_state_shardings_moments_follow_params():
+    from repro.train.optimizer import OptimizerConfig
+    from repro.train.train_step import create_train_state
+
+    cfg = get_smoke("glm4-9b")
+    mesh = _mesh()
+    state_shape = jax.eval_shape(
+        lambda: create_train_state(cfg, OptimizerConfig(total_steps=10), jax.random.key(0))
+    )
+    sh = state_shardings(cfg, state_shape, mesh)
+    assert sh.params["blocks"]["attn"]["wq"].spec == sh.opt.m["blocks"]["attn"]["wq"].spec
+    assert sh.opt.m["blocks"]["attn"]["wq"].spec == P(None, None, "model")
+    assert sh.opt.step.spec == P()  # scalar counter replicated
+
+
+def test_batch_shardings_leading_dim_only():
+    mesh = _mesh()
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((8, 16), jnp.int32),
+    }
+    sh = batch_shardings(mesh, specs)
+    assert sh["tokens"].spec == P("data")
+    # a bare leaf (decode tokens) works too
+    one = batch_shardings(mesh, jax.ShapeDtypeStruct((8,), jnp.int32))
+    assert one.spec == P("data")
+
+
+def test_cache_shardings_find_batch_dim_across_families():
+    mesh = _mesh()
+    # dense: kv leaves are (L, B, S, kvh, hd)
+    cfg = get_smoke("mistral-nemo-12b")
+    cache = jax.eval_shape(lambda: init_cache(cfg, 4, 16))
+    sh = cache_shardings(cfg, cache, mesh)
+    assert sh["kv"]["k"].spec == P(None, "data")
+    assert sh["pos"].spec == P()
+    # hybrid: conv/ssm carry two stacked leading dims before batch
+    cfg_h = get_smoke("jamba-1.5-large-398b")
+    cache_h = jax.eval_shape(lambda: init_cache(cfg_h, 4, 16))
+    sh_h = cache_shardings(cfg_h, cache_h, mesh)
+    assert sh_h["conv"].spec == P(None, None, "data", None, "model")
+    assert sh_h["ssm"].spec == P(None, None, "data", "model")
+    # ssm (rwkv): recurrent state is (L, B, ...)
+    cfg_s = get_smoke("rwkv6-1.6b")
+    cache_s = jax.eval_shape(lambda: init_cache(cfg_s, 4, 16))
+    sh_s = cache_shardings(cfg_s, cache_s, mesh)
+    assert sh_s["tm_s"].spec == P(None, "data")
+
+
+def test_odd_batch_falls_back_to_replicated():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # rule resolution itself (not device layout) decides the fallback: on a
+    # {"data": 2} mesh a batch of 3 cannot be split evenly
+    from repro.dist.sharding import default_rules, logical_to_spec
+
+    spec = logical_to_spec(("batch",), default_rules(), {"data": 2, "model": 4}, (3,))
+    assert spec == P()
+    # end-to-end on the real (1,1) mesh: still a valid NamedSharding
+    one = batch_shardings(mesh, jax.ShapeDtypeStruct((3,), jnp.int32))
+    assert isinstance(one, NamedSharding)

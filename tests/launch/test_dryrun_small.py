@@ -45,10 +45,13 @@ else:
     with use_sharding(mesh, default_rules()):
         compiled = jax.jit(fn, in_shardings=(p_sh, c_sh, t_sh)).lower(
             params_shape, specs["cache"], specs["tokens"]).compile()
+# per-device list on older jax (kept inline: importing repro.launch.dryrun
+# for its _normalize_cost would overwrite this process's XLA_FLAGS)
 cost = compiled.cost_analysis()
+if isinstance(cost, (list, tuple)):
+    cost = cost[0] if cost else {{}}
 coll = analyze_collectives(compiled.as_text())
-print(json.dumps({{"flops": float(cost.get("flops", 0) if isinstance(cost, dict) else 0),
-                   "collectives": coll}}))
+print(json.dumps({{"flops": float(cost.get("flops", 0)), "collectives": coll}}))
 """
     env = dict(os.environ, PYTHONPATH="src")
     out = subprocess.run(
