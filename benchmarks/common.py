@@ -41,16 +41,56 @@ def timed(fn: Callable, *args, **kw):
     return out, time.perf_counter() - t0
 
 
-def make_policies(N, C, T, B=1, eta=None, zeta=None, seed=0):
-    """The paper's comparison set, tuned per theory unless overridden."""
-    from repro.core.ftpl import FTPL
-    from repro.core.ogb import OGB
-    from repro.core.policies import ARC, LFU, LRU
+def make_policies(N, C, T, B=1, eta=None, zeta=None, seed=0, kinds=None):
+    """The paper's host-side comparison set, tuned per theory unless
+    overridden.  Every constructor goes through the one shared registry
+    (:data:`repro.core.policies.POLICY_REGISTRY`) so the kind-string set
+    cannot drift from ``make_policy`` / ``simulator.compare``.
+    """
+    from repro.core.policies import make_policy
 
-    return {
-        "OGB": OGB(N, C, eta=eta, horizon=None if eta else T, batch_size=B, seed=seed),
-        "FTPL": FTPL(N, C, zeta=zeta, horizon=None if zeta else T, seed=seed),
-        "LRU": LRU(N, C),
-        "LFU": LFU(N, C),
-        "ARC": ARC(N, C),
+    per_kind_kw = {
+        "ogb": dict(eta=eta, horizon=None if eta else T, batch_size=B, seed=seed),
+        "ogb_cl": dict(eta=eta, horizon=None if eta else T, batch_size=B, seed=seed),
+        "omd_cl": dict(eta=eta, horizon=None if eta else T, batch_size=B, seed=seed),
+        "ftpl": dict(zeta=zeta, horizon=None if zeta else T, seed=seed),
     }
+    out = {}
+    if kinds is None:
+        kinds = ("ogb", "ftpl", "lru", "lfu", "arc")
+    for kind in kinds:
+        p = make_policy(kind, N, C, **per_kind_kw.get(kind, {}))
+        out[getattr(p, "name", kind)] = p
+    return out
+
+
+def check_finite(payload, _path="results") -> None:
+    """Fail a benchmark loudly on NaN/inf/empty/missing results (CI guard)."""
+    if isinstance(payload, dict):
+        if not payload:
+            raise AssertionError(f"{_path}: empty result dict")
+        for k, v in payload.items():
+            check_finite(v, f"{_path}.{k}")
+    elif isinstance(payload, (list, tuple)):
+        if not payload:
+            raise AssertionError(f"{_path}: empty result list")
+        for i, v in enumerate(payload):
+            check_finite(v, f"{_path}[{i}]")
+    elif isinstance(payload, np.ndarray):
+        if payload.size == 0:
+            raise AssertionError(f"{_path}: empty result array")
+        if np.issubdtype(payload.dtype, np.number) and not np.all(
+            np.isfinite(payload)
+        ):
+            raise AssertionError(f"{_path}: non-finite values {payload!r}")
+    elif isinstance(payload, (bool, str)):
+        pass  # labels / flags are fine
+    elif isinstance(payload, (int, float, np.floating, np.integer)):
+        if not np.isfinite(payload):
+            raise AssertionError(f"{_path}: non-finite value {payload!r}")
+    else:
+        # None (the canonical missing-result value) and anything exotic:
+        # a guard that shrugs at these would write the bad JSON anyway
+        raise AssertionError(
+            f"{_path}: unexpected result type {type(payload).__name__}"
+        )

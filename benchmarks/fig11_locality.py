@@ -3,25 +3,32 @@
 Left: cumulative max-hit share of items sorted by lifetime — the twitter-like
 trace gets ~20% of its attainable hits from items with lifetime < 100
 requests; the cdn-like trace gets almost none from short-lived items.
-Right: reuse-distance CDF (twitter-like concentrated at small distances)."""
+Right: reuse-distance CDF (twitter-like concentrated at small distances).
+
+Configured through the scenario registry (``fig11_cdn`` / ``fig11_twitter``)
+and computed with the vectorized ``trace_stats`` / ``reuse_distances`` — the
+per-request Python dict loops are gone, so REPRO_BENCH_SCALE=full analyses
+the paper's T=2e7 traces in seconds."""
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.cachesim.traces import bursty, reuse_distances, trace_stats, zipf
+from repro.cachesim.scenarios import get_scenario
+from repro.cachesim.traces import reuse_distances, trace_stats
 
-from .common import csv_row, save_json, scale
+from .common import SCALE, check_finite, csv_row, save_json
 
 
 def main() -> dict:
-    N = scale(20_000, 1_000_000)
-    T = scale(150_000, 20_000_000)
+    scale = "full" if SCALE == "full" else "quick"
     out = {}
-    for tname, trace in {
-        "cdn_like": zipf(N, T, alpha=0.9, seed=11),
-        "twitter_like": bursty(N, T, seed=12),
+    for tname, sname in {
+        "cdn_like": "fig11_cdn",
+        "twitter_like": "fig11_twitter",
     }.items():
+        sc = get_scenario(sname)
+        trace = sc.make_trace(scale)
         st = trace_stats(trace)
         share100 = st.hit_share_lifetime_below(100)
         share1k = st.hit_share_lifetime_below(1000)
@@ -52,6 +59,7 @@ def main() -> dict:
     assert out["cdn_like"]["hit_share_lifetime_lt_100"] < 0.05
     assert out["twitter_like"]["frac_reuse_lt_100"] > 0.10
     assert out["cdn_like"]["median_reuse_distance"] > 500
+    check_finite(out)
     save_json("fig11_locality", out)
     return out
 

@@ -2,47 +2,47 @@
 
 ms-ex-like (shifting zipf), systor-like (scan mix), cdn-like (stationary
 zipf: OPT >> LRU, no-regret policies approach OPT), twitter-like (bursty:
-LRU wins; OGB robust; FTPL ~ noisy LFU)."""
+LRU wins; OGB robust; FTPL ~ noisy LFU).
+
+Migrated onto the device-resident engines via the scenario registry: every
+baseline (LRU/LFU/FIFO/FTPL/OMD/OGB) is one compiled ``lax.scan``, so
+REPRO_BENCH_SCALE=full replays the paper's T=2e7 traces in minutes instead of
+hours; ARC stays on the host-side oracle path and is skipped automatically at
+full scale."""
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.cachesim.simulator import simulate
-from repro.cachesim.traces import bursty, scan_mix, shifting_zipf, zipf
+from repro.cachesim.scenarios import get_scenario, run_scenario
 from repro.core.regret import opt_windowed_hit_ratio
 
-from .common import csv_row, make_policies, save_json, scale
+from .common import SCALE, check_finite, csv_row, save_json
 
-
-TRACES = {
-    "ms_ex_like": lambda N, T: shifting_zipf(N, T, alpha=0.9, phase=max(T // 8, 1), seed=3),
-    "systor_like": lambda N, T: scan_mix(N, T, seed=4),
-    "cdn_like": lambda N, T: zipf(N, T, alpha=0.9, seed=5),
-    "twitter_like": lambda N, T: bursty(
-        N, T, burst_fraction=0.5, burst_len_mean=8.0, burst_span=60, seed=6
-    ),
+SCENARIO_NAMES = {
+    "ms_ex_like": "fig7_ms_ex",
+    "systor_like": "fig7_systor",
+    "cdn_like": "fig8_cdn",
+    "twitter_like": "fig8_twitter",
 }
 
 
 def main() -> dict:
-    N = scale(20_000, 1_000_000)
-    T = scale(200_000, 20_000_000)
-    C = N // 20
-    window = max(T // 10, 1)
-
+    scale = "full" if SCALE == "full" else "quick"
     results = {}
-    for tname, gen in TRACES.items():
-        trace = gen(N, T)
-        policies = make_policies(N, C, T)
-        rows = {}
-        for pname, p in policies.items():
-            res = simulate(p, trace, window=window, record_cum=False)
-            rows[pname] = res.hit_ratio
+    for tname, sname in SCENARIO_NAMES.items():
+        sc = get_scenario(sname)
+        N, T, C = sc.dims(scale)
+        window = max(T // 10, 1)
+        trace = sc.make_trace(scale)
+        # OPT is recomputed windowed below — skip the scenario's own OPT pass
+        res = run_scenario(sname, scale=scale, trace=trace, include_opt=False)
+        rows = {name: row["hit_ratio"] for name, row in res.rows.items()}
+        for pname, row in res.rows.items():
             csv_row(
                 f"fig7_8/{tname}/{pname}",
-                res.us_per_request,
-                f"hit_ratio={res.hit_ratio:.4f}",
+                row.get("us_per_request", 0.0),
+                f"hit_ratio={row['hit_ratio']:.4f}",
             )
         opt_w = opt_windowed_hit_ratio(trace, C, window)
         rows["OPT(static)"] = float(np.mean(opt_w))
@@ -50,13 +50,21 @@ def main() -> dict:
         print(f"\n{tname} (N={N} C={C} T={T}):")
         for k, v in sorted(rows.items(), key=lambda kv: -kv[1]):
             print(f"  {k:>12}: hit={v:.4f}")
+        if res.skipped:
+            print(f"  (host-only policies skipped at this scale: {res.skipped})")
 
     # figure-level claims
     assert results["cdn_like"]["OGB"] > results["cdn_like"]["LRU"], "Fig8-left"
     # Fig8-right: temporal locality lets recency policies beat the static
-    # allocation (paper: LRU highest; our ARC variant is the recency leader)
-    recency_best = max(results["twitter_like"]["LRU"], results["twitter_like"]["ARC"])
-    assert recency_best > results["twitter_like"]["OPT(static)"], results["twitter_like"]
+    # allocation (paper: LRU highest among the recency family)
+    recency_best = max(
+        results["twitter_like"]["LRU"],
+        results["twitter_like"].get("ARC", 0.0),
+    )
+    assert recency_best > results["twitter_like"]["OPT(static)"], results[
+        "twitter_like"
+    ]
+    check_finite(results)
     save_json("fig7_8_traces", results)
     return results
 

@@ -15,6 +15,7 @@ import traceback
 
 from . import (
     complexity_scaling,
+    engines_throughput,
     kernel_sweeps,
     fig2_adversarial,
     fig3_sensitivity_short,
@@ -37,6 +38,7 @@ SUITES = {
     "complexity": complexity_scaling.main,
     "kernels": kernel_sweeps.main,
     "throughput": throughput.main,
+    "engines": engines_throughput.main,
 }
 
 

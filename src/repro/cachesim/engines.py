@@ -1,0 +1,595 @@
+"""Device-resident baseline policy engines — classic policies as scan automata.
+
+The paper's comparison baselines (LRU / FIFO / LFU, the no-regret FTPL of
+Bhattacharjee et al. and OMD of Si Salem et al.) were host-side per-request
+Python loops (:mod:`repro.core.policies` driven by
+:func:`repro.cachesim.simulator.simulate`), which caps every comparison figure
+at toy scale while OGB alone rides the ``lax.scan`` replay engine
+(:mod:`repro.cachesim.replay`).  This module gives each baseline the same
+device-resident treatment:
+
+* **LRU / FIFO** — fixed-size slot arrays ``(slots, stamps)``: membership is a
+  C-wide compare, the victim is ``argmin(stamps)`` (last-use time for LRU,
+  insertion time for FIFO).  Bit-exact vs the OrderedDict policies: the hit
+  sequence depends only on the membership set, which is fully determined by
+  the timestamp map.
+* **LFU** — perfect-frequency counters over the catalog plus slot arrays with
+  the Python policy's exact ``(freq, tick)`` eviction key and "admit only if
+  the newcomer's frequency beats the victim's" rule, via a two-stage argmin
+  (min frequency, then min tick).
+* **FTPL** — perturbed counters ``count + noise`` with top-C membership
+  maintained by single-swap eviction.  The noise is the *same float32 grid*
+  the host policy uses (:func:`repro.core.ftpl.ftpl_noise`), and scores are
+  float32 IEEE adds on both sides, so agreement is bit-exact, not approximate.
+* **OMD** — negative-entropy mirror descent (multiplicative weights with a
+  KL projection onto the capped simplex), sharing the warm-bracket idea of
+  :func:`repro.jaxcache.fractional.capped_simplex_project_warm`: after the
+  log-weight step the threshold provably lies in ``[0, eta * B]``, and a few
+  safeguarded Newton sweeps replace a cold bisection.
+
+Every automaton is one ``jax.lax.scan`` over ``(M, W)`` request chunks with a
+donated carry (the :class:`repro.cachesim.replay.ReplayCarry` pattern):
+nothing crosses the host boundary until the final metrics fetch.  The sweep
+layer (:func:`sweep_engine`) stacks carries and ``vmap``s one compiled replay
+over (capacities x seeds) so a whole scenario grid is a single device
+dispatch; the per-request Python policies stay available as the slow
+differential-testing oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.cachesim.replay import (
+    ReplayMetrics,
+    find_combo,
+    opt_hits_by_combo,
+    sample_chunk_metrics,
+    sampling_arrays,
+)
+from repro.core.ftpl import ftpl_initial_top_c, ftpl_noise, theoretical_zeta
+from repro.core.omd import theoretical_eta_omd
+from repro.jaxcache.fractional import warm_bracket_hi
+
+_I32_MAX = np.int32(np.iinfo(np.int32).max)
+_I32_MIN = np.int32(np.iinfo(np.int32).min)
+
+#: kinds compiled by this module as discrete slot automata
+ENGINE_KINDS = ("lru", "fifo", "lfu", "ftpl")
+DEFAULT_OMD_SWEEPS = 10
+
+
+# ---------------------------------------------------------------------------
+# carries — ReplayCarry-style NamedTuples of fixed-shape device arrays
+# ---------------------------------------------------------------------------
+class SlotCarry(NamedTuple):
+    """LRU / FIFO state: C slots with an eviction timestamp each.
+
+    Slot ids: ``-1`` empty (fillable), ``-2`` inactive (capacity padding for
+    vmapped sweeps over capacities; never matched, never evicted into).
+    """
+
+    slots: jax.Array  # (K,) int32 item ids
+    stamps: jax.Array  # (K,) int32; empty = -1, inactive = INT32_MAX
+    t: jax.Array  # () int32 request clock
+
+
+class LFUCarry(NamedTuple):
+    slots: jax.Array  # (K,) int32 item ids (-1 empty, -2 inactive)
+    ticks: jax.Array  # (K,) int32 tie-break clock; inactive = INT32_MAX
+    counts: jax.Array  # (N,) int32 perfect-LFU counters
+    t: jax.Array  # () int32
+
+
+class FTPLCarry(NamedTuple):
+    slots: jax.Array  # (K,) int32 item ids (-2 inactive; always C cached)
+    counts: jax.Array  # (N,) int32 request counters
+    noise: jax.Array  # (N,) float32 one-shot perturbation (constant)
+
+
+class OMDCarry(NamedTuple):
+    """Normalized log-weight state: f = min(1, exp(w)) is always feasible."""
+
+    f: jax.Array  # (N,) float32 fractional cache state
+    w: jax.Array  # (N,) float32 log-weights, renormalized every chunk
+    lam: jax.Array  # () float32 last chunk's KL-projection threshold
+    counts: jax.Array  # (N,) float32 whole-trace histogram (hindsight OPT)
+
+
+def _padded(active: np.ndarray, n_slots: int, inactive_val: int) -> jnp.ndarray:
+    pad = n_slots - len(active)
+    if pad < 0:
+        raise ValueError(f"n_slots {n_slots} < capacity {len(active)}")
+    return jnp.asarray(
+        np.concatenate([active, np.full(pad, inactive_val, active.dtype)])
+    )
+
+
+def init_engine_carry(
+    kind: str,
+    catalog_size: int,
+    capacity: int,
+    *,
+    n_slots: Optional[int] = None,
+    seed: int = 0,
+    zeta: Optional[float] = None,
+    horizon: Optional[int] = None,
+):
+    """Build the initial carry for one automaton.
+
+    ``n_slots`` > capacity pads with inactive slots so carries for different
+    capacities share a shape (the vmapped-sweep requirement).
+    """
+    K = int(n_slots) if n_slots else int(capacity)
+    C = int(capacity)
+    if kind in ("lru", "fifo"):
+        return SlotCarry(
+            slots=_padded(np.full(C, -1, np.int32), K, -2),
+            stamps=_padded(np.full(C, -1, np.int32), K, _I32_MAX),
+            t=jnp.zeros((), jnp.int32),
+        )
+    if kind == "lfu":
+        return LFUCarry(
+            slots=_padded(np.full(C, -1, np.int32), K, -2),
+            ticks=_padded(np.full(C, -1, np.int32), K, _I32_MAX),
+            counts=jnp.zeros(catalog_size, jnp.int32),
+            t=jnp.zeros((), jnp.int32),
+        )
+    if kind == "ftpl":
+        if zeta is None:
+            if horizon is None:
+                raise ValueError("ftpl needs zeta or horizon")
+            zeta = theoretical_zeta(C, catalog_size, horizon)
+        noise = ftpl_noise(catalog_size, zeta, seed=seed)
+        top = ftpl_initial_top_c(noise, C).astype(np.int32)
+        return FTPLCarry(
+            slots=_padded(top, K, -2),
+            counts=jnp.zeros(catalog_size, jnp.int32),
+            noise=jnp.asarray(noise),
+        )
+    raise ValueError(f"unknown engine kind {kind!r} (have {ENGINE_KINDS})")
+
+
+# ---------------------------------------------------------------------------
+# per-request steps — each mirrors its core/policies.py counterpart exactly
+# ---------------------------------------------------------------------------
+def _lru_step(carry: SlotCarry, j):
+    slots, stamps, t = carry
+    match = slots == j
+    hit = jnp.any(match)
+    # one fused pass: a matching slot outranks every timestamp, so argmin is
+    # the hit slot on a hit and the oldest (or first empty) slot on a miss
+    idx = jnp.argmin(jnp.where(match, _I32_MIN, stamps))
+    slots = slots.at[idx].set(j)  # no-op on hit (slot already holds j)
+    stamps = stamps.at[idx].set(t)  # refresh-on-hit == LRU
+    return SlotCarry(slots, stamps, t + 1), hit
+
+
+def _fifo_step(carry: SlotCarry, j):
+    slots, stamps, t = carry
+    match = slots == j
+    hit = jnp.any(match)
+    idx = jnp.argmin(jnp.where(match, _I32_MIN, stamps))
+    # FIFO never refreshes: on a hit both writes are no-ops
+    slots = slots.at[idx].set(j)
+    stamps = stamps.at[idx].set(jnp.where(hit, stamps[idx], t))
+    return SlotCarry(slots, stamps, t + 1), hit
+
+
+def _lfu_step(carry: LFUCarry, j):
+    slots, ticks, counts, t = carry
+    counts = counts.at[j].add(1)
+    f = counts[j]
+    match = slots == j
+    hit = jnp.any(match)
+    # per-slot eviction key (freq, tick): empty slots (-1) sort below any real
+    # frequency >= 1 so they fill first; inactive slots (-2) sort above all
+    sf = jnp.where(
+        slots >= 0,
+        counts[jnp.maximum(slots, 0)],
+        jnp.where(slots == -1, jnp.int32(-1), _I32_MAX),
+    )
+    minf = jnp.min(sf)
+    victim = jnp.argmin(jnp.where(sf == minf, ticks, _I32_MAX))
+    idx = jnp.where(hit, jnp.argmax(match), victim)
+    # admission: the newcomer must match the victim's frequency (policies.LFU)
+    write = jnp.logical_or(hit, f >= minf)
+    slots = slots.at[idx].set(jnp.where(write, j, slots[idx]))
+    ticks = ticks.at[idx].set(jnp.where(write, t, ticks[idx]))
+    return LFUCarry(slots, ticks, counts, t + 1), hit
+
+
+def _ftpl_step(carry: FTPLCarry, j):
+    slots, counts, noise = carry
+    counts = counts.at[j].add(1)
+    s = counts[j].astype(jnp.float32) + noise[j]
+    match = slots == j
+    hit = jnp.any(match)
+    si = jnp.maximum(slots, 0)
+    sscore = jnp.where(
+        slots >= 0, counts[si].astype(jnp.float32) + noise[si], jnp.inf
+    )
+    mins = jnp.min(sscore)
+    # ties break by item id, matching the host policy's (score, item) store
+    victim = jnp.argmin(jnp.where(sscore == mins, slots, _I32_MAX))
+    swap = jnp.logical_and(~hit, s > mins)  # strict >, like the host policy
+    slots = slots.at[victim].set(jnp.where(swap, j, slots[victim]))
+    return FTPLCarry(slots, counts, noise), hit
+
+
+def _occ_slots(carry) -> jax.Array:
+    return jnp.sum((carry.slots >= 0).astype(jnp.int32))
+
+
+_STEPS = {
+    "lru": _lru_step,
+    "fifo": _fifo_step,
+    "lfu": _lfu_step,
+    "ftpl": _ftpl_step,
+}
+
+
+def make_engine_run(kind: str):
+    """Unjitted whole-trace automaton: ``run(carry, chunks) -> (carry, ys)``.
+
+    ``chunks`` is (M, W) int32; ``ys`` stacks per-chunk (hits, occupancy).
+    Kept unjitted so :func:`sweep_engine` can ``vmap`` it; callers wanting a
+    single replay should use :func:`make_engine_fn`.
+    """
+    step = _STEPS[kind]
+
+    def run(carry, chunks):
+        def outer(c, ids):
+            c, hits = jax.lax.scan(step, c, ids)
+            return c, (jnp.sum(hits.astype(jnp.int32)), _occ_slots(c))
+
+        return jax.lax.scan(outer, carry, chunks)
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def make_engine_fn(kind: str):
+    """Jitted (donated-carry) form of :func:`make_engine_run`."""
+    return jax.jit(make_engine_run(kind), donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# host-side result view
+# ---------------------------------------------------------------------------
+@dataclass
+class EngineResult:
+    """Host-side view of one automaton replay (single final fetch)."""
+
+    name: str
+    kind: str
+    T: int
+    window: int
+    capacity: int
+    hits: np.ndarray  # (M,) per-chunk integral hits
+    occupancy: np.ndarray  # (M,) per-chunk cached-item count
+    wall_seconds: float = 0.0
+    extras: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def hit_ratio(self) -> float:
+        return float(self.hits.sum()) / max(self.T, 1)
+
+    @property
+    def us_per_request(self) -> float:
+        return 1e6 * self.wall_seconds / max(self.T, 1)
+
+    def windowed_hit_ratio(self, window: int) -> np.ndarray:
+        per = max(window // self.window, 1)
+        m = (len(self.hits) // per) * per
+        if m == 0:
+            return np.array([self.hit_ratio])
+        return self.hits[:m].reshape(-1, per).sum(axis=1) / (per * self.window)
+
+
+def _as_chunks(trace: np.ndarray, window: int) -> Tuple[jnp.ndarray, int]:
+    m = len(trace) // window
+    if m == 0:
+        raise ValueError(f"trace shorter than one window ({len(trace)} < {window})")
+    t_used = m * window
+    return (
+        jnp.asarray(np.asarray(trace[:t_used]).reshape(m, window), jnp.int32),
+        t_used,
+    )
+
+
+def run_engine(
+    kind: str,
+    trace: np.ndarray,
+    catalog_size: int,
+    capacity: int,
+    *,
+    window: int = 10_000,
+    seed: int = 0,
+    zeta: Optional[float] = None,
+    horizon: Optional[int] = None,
+    name: Optional[str] = None,
+) -> EngineResult:
+    """Replay a whole trace through one scan automaton (AOT-compiled timing).
+
+    A trailing partial window is dropped, matching :func:`replay_trace`.
+    ``horizon`` defaults to the replayed length for FTPL's zeta tuning.
+    """
+    chunks, t_used = _as_chunks(trace, window)
+    if kind == "ftpl" and zeta is None and horizon is None:
+        horizon = t_used
+    carry = init_engine_carry(
+        kind, catalog_size, capacity, seed=seed, zeta=zeta, horizon=horizon
+    )
+    fn = make_engine_fn(kind)
+    compiled = fn.lower(carry, chunks).compile()
+    t0 = time.perf_counter()
+    carry, (hits, occ) = compiled(carry, chunks)
+    jax.block_until_ready((hits, occ))
+    wall = time.perf_counter() - t0
+    return EngineResult(
+        name=name or kind.upper(),
+        kind=kind,
+        T=t_used,
+        window=window,
+        capacity=int(capacity),
+        hits=np.asarray(hits, np.int64),
+        occupancy=np.asarray(occ, np.int64),
+        wall_seconds=wall,
+    )
+
+
+def engine_hit_sequence(
+    kind: str,
+    trace: np.ndarray,
+    catalog_size: int,
+    capacity: int,
+    **kw,
+) -> np.ndarray:
+    """Per-request hit flags (window=1) — the differential-testing probe."""
+    res = run_engine(kind, trace, catalog_size, capacity, window=1, **kw)
+    return res.hits.astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# OMD — mirror-descent fractional engine (multiplicative analogue of replay)
+# ---------------------------------------------------------------------------
+def _omd_project(w, cap, hi, sweeps):
+    """Safeguarded-Newton KL threshold: lam with sum min(1, e^(w-lam)) = C.
+
+    For feasible pre-step weights the root provably lies in [0, hi] where hi
+    covers the added gradient mass eta*B (same invariant as
+    ``warm_bracket_hi``): weights only grew, so mass(0) >= C, and every
+    log-weight grew by at most eta*B, so mass(eta*B) <= C.  g is convex and
+    decreasing, so Newton from the mass-excess side converges monotonically;
+    the bisection midpoint safeguards the other side.
+    """
+    cap = jnp.float32(cap)
+
+    def body(_, c):
+        lo, hi, t = c
+        e = jnp.exp(w - t)
+        fcur = jnp.minimum(1.0, e)
+        mass = jnp.sum(fcur)
+        interior = jnp.sum(jnp.where(e < 1.0, e, 0.0))
+        too_much = mass >= cap
+        lo = jnp.where(too_much, t, lo)
+        hi = jnp.where(too_much, hi, t)
+        t_newton = t + (mass - cap) / jnp.maximum(interior, 1e-12)
+        t_mid = 0.5 * (lo + hi)
+        ok = jnp.logical_and(t_newton >= lo, t_newton <= hi)
+        return lo, hi, jnp.where(ok, t_newton, t_mid)
+
+    lo0 = jnp.float32(0.0)
+    _lo, _hi, lam = jax.lax.fori_loop(
+        0, sweeps, body, (lo0, jnp.float32(hi), lo0)
+    )
+    return lam
+
+
+@functools.lru_cache(maxsize=64)
+def make_omd_fn(
+    catalog_size: int,
+    capacity: int,
+    batch: int,
+    sample: str = "poisson",
+    sweeps: int = DEFAULT_OMD_SWEEPS,
+    track_opt: bool = True,
+):
+    """Jitted whole-trace OMD replay, interface-compatible with
+    :func:`repro.cachesim.replay.make_replay_fn`:
+    ``replay(carry, chunks, eta, p, us) -> (carry', opt_hits, ys)``.
+    """
+    if sample not in ("poisson", "madow", "none"):
+        raise ValueError(f"unknown sample mode {sample!r}")
+    cap_f = float(capacity)
+
+    def step(eta, p, carry, xs):
+        f, w, _lam, counts_tot = carry
+        ids, u = xs
+        reward, hits, occ = sample_chunk_metrics(
+            sample, capacity, f, ids, p, u
+        )
+        w = w.at[ids].add(eta)
+        lam = _omd_project(
+            w, cap_f, warm_bracket_hi(eta * jnp.float32(batch)), sweeps
+        )
+        w = w - lam  # renormalize: f = min(1, e^w) stays threshold-free
+        f_new = jnp.minimum(1.0, jnp.exp(w))
+        if track_opt:
+            counts_tot = counts_tot.at[ids].add(1.0)
+        return OMDCarry(f_new, w, lam, counts_tot), (reward, hits, lam, occ)
+
+    def replay(carry, chunks, eta, p, us):
+        m = chunks.shape[0]
+        if us.shape[0] != m:
+            us = jnp.zeros((m,), jnp.float32)
+        carry, ys = jax.lax.scan(
+            lambda c, x: step(eta, p, c, x), carry, (chunks, us)
+        )
+        if track_opt:
+            opt = jnp.sum(jax.lax.top_k(carry.counts, capacity)[0])
+        else:
+            opt = jnp.zeros((), jnp.float32)
+        return carry, opt, ys
+
+    return jax.jit(replay, donate_argnums=(0,))
+
+
+def init_omd_carry(catalog_size: int, capacity: int) -> OMDCarry:
+    f0 = capacity / catalog_size
+    return OMDCarry(
+        f=jnp.full(catalog_size, f0, jnp.float32),
+        w=jnp.full(catalog_size, float(np.log(f0)), jnp.float32),
+        lam=jnp.zeros((), jnp.float32),
+        counts=jnp.zeros(catalog_size, jnp.float32),
+    )
+
+
+def run_omd(
+    trace: np.ndarray,
+    catalog_size: int,
+    capacity: int,
+    batch: int,
+    *,
+    eta: Optional[float] = None,
+    sample: str = "poisson",
+    sweeps: int = DEFAULT_OMD_SWEEPS,
+    seed: int = 0,
+    track_opt: bool = True,
+    keep_final_f: bool = False,
+    name: str = "OMD",
+):
+    """Replay a whole trace through the scan-compiled OMD engine.
+
+    Returns a :class:`repro.cachesim.replay.ReplayMetrics` (the taus field
+    holds the per-chunk KL thresholds lambda).
+    """
+    m = len(trace) // batch
+    if m == 0:
+        raise ValueError(f"trace shorter than one batch ({len(trace)} < {batch})")
+    t_used = m * batch
+    if eta is None:
+        eta = theoretical_eta_omd(capacity, catalog_size, t_used, batch)
+    chunks = jnp.asarray(
+        np.asarray(trace[:t_used]).reshape(m, batch), jnp.int32
+    )
+    p, us = sampling_arrays(seed, catalog_size, m, sample)
+    fn = make_omd_fn(
+        catalog_size, capacity, batch, sample=sample, sweeps=sweeps,
+        track_opt=track_opt,
+    )
+    carry = init_omd_carry(catalog_size, capacity)
+    t0 = time.perf_counter()
+    carry, opt, (reward, hits, lams, occ) = fn(
+        carry, chunks, jnp.float32(eta), p, us
+    )
+    jax.block_until_ready((carry.f, opt, reward, hits, lams, occ))
+    wall = time.perf_counter() - t0
+    return ReplayMetrics(
+        name=name,
+        T=t_used,
+        batch=batch,
+        capacity=capacity,
+        frac_reward=np.asarray(reward, np.float64),
+        hits=np.asarray(hits, np.int64),
+        taus=np.asarray(lams, np.float64),
+        occupancy=np.asarray(occ, np.float64),
+        opt_hits=float(opt),
+        final_f=np.asarray(carry.f) if keep_final_f else None,
+        wall_seconds=wall,
+        extras={"eta": float(eta), "sweeps": float(sweeps)},
+    )
+
+
+# ---------------------------------------------------------------------------
+# vmapped sweeps: one device dispatch over (capacities x seeds)
+# ---------------------------------------------------------------------------
+@dataclass
+class EngineSweepResult:
+    """Stacked results of one vmapped automaton sweep."""
+
+    kind: str
+    combos: List[Dict[str, float]]  # [{"capacity": C, "seed": s}, ...]
+    T: int
+    window: int
+    hits: np.ndarray  # (R, M)
+    occupancy: np.ndarray  # (R, M)
+    opt_hits: np.ndarray  # (R,) hindsight static-OPT per combo (host-side)
+    wall_seconds: float = 0.0
+
+    @property
+    def hit_ratios(self) -> np.ndarray:
+        return self.hits.sum(axis=1) / max(self.T, 1)
+
+    def row(self, **match) -> int:
+        return find_combo(self.combos, **match)
+
+
+def sweep_engine(
+    kind: str,
+    trace: np.ndarray,
+    catalog_size: int,
+    capacities: Sequence[int],
+    *,
+    seeds: Sequence[int] = (0,),
+    window: int = 10_000,
+    zeta: Optional[float] = None,
+    horizon: Optional[int] = None,
+    track_opt: bool = True,
+) -> EngineSweepResult:
+    """Run one automaton over a (capacity x seed) grid in a single dispatch.
+
+    Carries are padded to ``max(capacities)`` slots and stacked; the compiled
+    replay is ``vmap``-ed over the stack with the trace broadcast.  Seeds only
+    affect FTPL (the noise draw) but are accepted uniformly so callers can
+    sweep any engine with one call.  OPT is computed host-side per capacity
+    (it depends only on the trace histogram).
+    """
+    chunks, t_used = _as_chunks(trace, window)
+    if kind == "ftpl" and zeta is None and horizon is None:
+        horizon = t_used
+    n_slots = int(max(capacities))
+    combos = [
+        {"capacity": int(C), "seed": int(s)} for C in capacities for s in seeds
+    ]
+    carries = [
+        init_engine_carry(
+            kind, catalog_size, combo["capacity"], n_slots=n_slots,
+            seed=combo["seed"], zeta=zeta, horizon=horizon,
+        )
+        for combo in combos
+    ]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *carries)
+    vrun = jax.jit(
+        jax.vmap(make_engine_run(kind), in_axes=(0, None)),
+        donate_argnums=(0,),
+    )
+    compiled = vrun.lower(stacked, chunks).compile()
+    t0 = time.perf_counter()
+    _carry, (hits, occ) = compiled(stacked, chunks)
+    jax.block_until_ready((hits, occ))
+    wall = time.perf_counter() - t0
+    opt = (
+        opt_hits_by_combo(np.asarray(trace[:t_used]), combos)
+        if track_opt
+        else np.zeros(len(combos))
+    )
+    return EngineSweepResult(
+        kind=kind,
+        combos=combos,
+        T=t_used,
+        window=window,
+        hits=np.asarray(hits, np.int64),
+        occupancy=np.asarray(occ, np.int64),
+        opt_hits=opt,
+        wall_seconds=wall,
+    )

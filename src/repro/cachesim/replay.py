@@ -28,7 +28,7 @@ from __future__ import annotations
 import functools
 import time
 from dataclasses import dataclass, field
-from typing import Dict, NamedTuple, Optional
+from typing import Dict, List, NamedTuple, Optional, Sequence
 
 import numpy as np
 
@@ -46,6 +46,71 @@ from repro.jaxcache.fractional import (
 )
 
 
+def sampling_arrays(
+    seed: int, catalog_size: int, m: int, sample: str
+) -> tuple:
+    """Seed-derived (p, us): permanent random numbers for Poisson sampling
+    and per-chunk Madow offsets.  The one derivation every replay flavor
+    (OGB scan, OMD engine, vmapped sweeps) shares — size-0 placeholders for
+    the unused mode."""
+    k_p, k_u = jax.random.split(jax.random.key(seed))
+    p = (
+        permanent_random_numbers(k_p, catalog_size)
+        if sample == "poisson"
+        else jnp.zeros((0,), jnp.float32)
+    )
+    us = (
+        jax.random.uniform(k_u, (m,), jnp.float32)
+        if sample == "madow"
+        else jnp.zeros((0,), jnp.float32)
+    )
+    return p, us
+
+
+def sample_chunk_metrics(sample: str, capacity, f, ids, p, u):
+    """(reward, hits, occupancy) for one request chunk at the pre-update
+    state ``f`` (OCO order).  The one definition of the Poisson / Madow /
+    fractional hit-accounting conventions, shared by the OGB and OMD scan
+    engines so they cannot drift."""
+    fi = f[ids]
+    reward = jnp.sum(fi)
+    if sample == "poisson":
+        # hits only need the requested coordinates: B-sized gathers, not an
+        # N-sized mask; occupancy is the one remaining catalog pass
+        hits = jnp.sum((fi >= p[ids]).astype(jnp.int32))
+        occ = jnp.sum((f >= p).astype(jnp.float32))
+    elif sample == "madow":
+        cached = madow_sample_jax(f, u, capacity)
+        hits = jnp.sum(cached[ids].astype(jnp.int32))
+        occ = jnp.sum(cached.astype(jnp.float32))
+    else:
+        hits = jnp.zeros((), jnp.int32)
+        occ = jnp.sum(f)
+    return reward, hits, occ
+
+
+def find_combo(combos: "List[Dict[str, float]]", **match) -> int:
+    """Row index of the sweep combo matching all given key/values."""
+    for r, combo in enumerate(combos):
+        if all(combo.get(k) == v for k, v in match.items()):
+            return r
+    raise KeyError(f"no combo matching {match}")
+
+
+def opt_hits_by_combo(
+    trace_prefix: np.ndarray, combos: "List[Dict[str, float]]"
+) -> np.ndarray:
+    """Hindsight static-OPT per combo, computed host-side once per capacity
+    (OPT depends only on the trace histogram and C)."""
+    from repro.core.regret import best_static_hits
+
+    opt_by_c = {
+        c: float(best_static_hits(trace_prefix, c))
+        for c in set(int(combo["capacity"]) for combo in combos)
+    }
+    return np.asarray([opt_by_c[int(c["capacity"])] for c in combos])
+
+
 class ReplayCarry(NamedTuple):
     """Scan carry: donated, lives on device for the whole replay."""
 
@@ -60,6 +125,55 @@ class ReplayCarry(NamedTuple):
             tau=jnp.zeros((), jnp.float32),
             counts=jnp.zeros(catalog_size, jnp.float32),
         )
+
+
+def _make_ogb_step(
+    batch: int,
+    sample: str,
+    projection: str,
+    sweeps: int,
+    iters: int,
+    track_opt: bool,
+    madow_capacity: Optional[int] = None,
+):
+    """The per-chunk OGB_cl update, with a *traced* capacity.
+
+    Shared by :func:`make_replay_fn` (capacity baked in as a constant) and
+    :func:`sweep_replay` (capacity vmapped over a grid).  ``madow_capacity``
+    must be the static C when ``sample == "madow"`` (Madow needs a static
+    sample count); the other modes treat capacity as data.
+    """
+    if sample not in ("poisson", "madow", "none"):
+        raise ValueError(f"unknown sample mode {sample!r}")
+    if projection not in ("warm", "bisect"):
+        raise ValueError(f"unknown projection mode {projection!r}")
+    if sample == "madow" and madow_capacity is None:
+        raise ValueError("madow sampling needs a static capacity")
+
+    def step(eta, p, cap, carry, xs):
+        f, tau_prev, counts_tot = carry
+        ids, u = xs
+        reward, hits, occ = sample_chunk_metrics(
+            sample, madow_capacity, f, ids, p, u
+        )
+        # gradient step as a B-element scatter-add (duplicates accumulate);
+        # avoids materializing a dense (N,) counts histogram per chunk
+        y = f.at[ids].add(eta)
+        if projection == "warm":
+            hi = warm_bracket_hi(eta * jnp.float32(batch))
+            f_new, tau = capped_simplex_project_warm(
+                y, cap, jnp.float32(0.0), hi, tau_prev, sweeps
+            )
+        else:
+            f_new, tau = capped_simplex_project(y, cap, iters)
+        if track_opt:
+            counts_tot = counts_tot.at[ids].add(1.0)
+        return (
+            ReplayCarry(f_new, tau, counts_tot),
+            (reward, hits, tau, occ),
+        )
+
+    return step
 
 
 @functools.lru_cache(maxsize=64)
@@ -85,52 +199,20 @@ def make_replay_fn(
     ``replay_trace`` in a sweep — reuse the same jitted function and hence
     XLA's compilation cache instead of re-tracing every time.
     """
-    if sample not in ("poisson", "madow", "none"):
-        raise ValueError(f"unknown sample mode {sample!r}")
-    if projection not in ("warm", "bisect"):
-        raise ValueError(f"unknown projection mode {projection!r}")
     cap_f = float(capacity)
-
-    def step(eta, p, carry, xs):
-        f, tau_prev, counts_tot = carry
-        ids, u = xs
-        fi = f[ids]
-        reward = jnp.sum(fi)
-        if sample == "poisson":
-            # hits only need the requested coordinates: B-sized gathers, not
-            # an N-sized mask; occupancy is the one remaining catalog pass
-            hits = jnp.sum((fi >= p[ids]).astype(jnp.int32))
-            occ = jnp.sum((f >= p).astype(jnp.float32))
-        elif sample == "madow":
-            cached = madow_sample_jax(f, u, capacity)
-            hits = jnp.sum(cached[ids].astype(jnp.int32))
-            occ = jnp.sum(cached.astype(jnp.float32))
-        else:
-            hits = jnp.zeros((), jnp.int32)
-            occ = jnp.sum(f)
-        # gradient step as a B-element scatter-add (duplicates accumulate);
-        # avoids materializing a dense (N,) counts histogram per chunk
-        y = f.at[ids].add(eta)
-        if projection == "warm":
-            hi = warm_bracket_hi(eta * jnp.float32(batch))
-            f_new, tau = capped_simplex_project_warm(
-                y, cap_f, jnp.float32(0.0), hi, tau_prev, sweeps
-            )
-        else:
-            f_new, tau = capped_simplex_project(y, cap_f, iters)
-        if track_opt:
-            counts_tot = counts_tot.at[ids].add(1.0)
-        return (
-            ReplayCarry(f_new, tau, counts_tot),
-            (reward, hits, tau, occ),
-        )
+    step = _make_ogb_step(
+        batch, sample, projection, sweeps, iters, track_opt,
+        madow_capacity=capacity,
+    )
 
     def replay(carry, chunks, eta, p, us):
         m = chunks.shape[0]
         if us.shape[0] != m:
             us = jnp.zeros((m,), jnp.float32)
         carry, ys = jax.lax.scan(
-            lambda c, x: step(eta, p, c, x), carry, (chunks, us)
+            lambda c, x: step(eta, p, jnp.float32(cap_f), c, x),
+            carry,
+            (chunks, us),
         )
         if track_opt:
             opt = jnp.sum(jax.lax.top_k(carry.counts, capacity)[0])
@@ -230,18 +312,7 @@ def replay_trace(
         np.asarray(trace[:t_used]).reshape(n_chunks, batch), jnp.int32
     )
 
-    key = jax.random.key(seed)
-    k_p, k_u = jax.random.split(key)
-    p = (
-        permanent_random_numbers(k_p, catalog_size)
-        if sample == "poisson"
-        else jnp.zeros((0,), jnp.float32)
-    )
-    us = (
-        jax.random.uniform(k_u, (n_chunks,), jnp.float32)
-        if sample == "madow"
-        else jnp.zeros((0,), jnp.float32)
-    )
+    p, us = sampling_arrays(seed, catalog_size, n_chunks, sample)
 
     fn = make_replay_fn(
         catalog_size,
@@ -274,4 +345,145 @@ def replay_trace(
         final_f=np.asarray(carry.f) if keep_final_f else None,
         wall_seconds=wall,
         extras={"eta": float(eta), "sweeps": float(sweeps)},
+    )
+
+
+# ---------------------------------------------------------------------------
+# vmapped scenario sweeps: (seeds x etas x capacities) in one device dispatch
+# ---------------------------------------------------------------------------
+@dataclass
+class ReplaySweepResult:
+    """Stacked OGB replays over a parameter grid (single final fetch)."""
+
+    combos: List[Dict[str, float]]  # [{"capacity", "eta", "seed"}, ...]
+    T: int
+    batch: int
+    frac_reward: np.ndarray  # (R, M)
+    hits: np.ndarray  # (R, M)
+    taus: np.ndarray  # (R, M)
+    occupancy: np.ndarray  # (R, M)
+    opt_hits: np.ndarray  # (R,) hindsight static-OPT per combo (host-side)
+    wall_seconds: float = 0.0
+
+    @property
+    def hit_ratios(self) -> np.ndarray:
+        return self.hits.sum(axis=1) / max(self.T, 1)
+
+    @property
+    def frac_hit_ratios(self) -> np.ndarray:
+        return self.frac_reward.sum(axis=1) / max(self.T, 1)
+
+    @property
+    def regrets(self) -> np.ndarray:
+        return self.opt_hits - self.frac_reward.sum(axis=1)
+
+    def row(self, **match) -> int:
+        return find_combo(self.combos, **match)
+
+
+def sweep_replay(
+    trace: np.ndarray,
+    catalog_size: int,
+    capacities: Sequence[int],
+    etas: Sequence[Optional[float]] = (None,),
+    seeds: Sequence[int] = (0,),
+    batch: int = 1000,
+    sample: str = "poisson",
+    projection: str = "warm",
+    sweeps: int = DEFAULT_WARM_SWEEPS,
+    iters: int = DEFAULT_BISECT_ITERS,
+    track_opt: bool = True,
+) -> ReplaySweepResult:
+    """Run the whole (seeds x etas x capacities) OGB grid in one dispatch.
+
+    Stacks one :class:`ReplayCarry` per combo and ``vmap``s the scan replay
+    over the stack with the trace broadcast — the entire grid costs one
+    compile + one device round-trip.  ``eta=None`` entries resolve to the
+    Theorem 3.1 tuning for that combo's capacity.  OPT is computed host-side
+    per capacity (it only depends on the trace histogram), so the device
+    carries no per-combo count arrays beyond the shared replay state.
+    """
+    from repro.core.ogb import theoretical_eta
+
+    m = len(trace) // batch
+    if m == 0:
+        raise ValueError(f"trace shorter than one batch ({len(trace)} < {batch})")
+    t_used = m * batch
+    chunks = jnp.asarray(
+        np.asarray(trace[:t_used]).reshape(m, batch), jnp.int32
+    )
+    combos = [
+        {
+            "capacity": int(C),
+            # eta=None resolves exactly like replay_trace's default (B=1
+            # Theorem 3.1 tuning) so default-tuned sweep rows reproduce
+            # default-tuned single replays
+            "eta": float(
+                eta
+                if eta is not None
+                else theoretical_eta(int(C), catalog_size, t_used, 1)
+            ),
+            "seed": int(s),
+        }
+        for s in seeds
+        for eta in etas
+        for C in capacities
+    ]
+    carry = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[ReplayCarry.create(catalog_size, c["capacity"]) for c in combos],
+    )
+    eta_arr = jnp.asarray([c["eta"] for c in combos], jnp.float32)
+    cap_arr = jnp.asarray([c["capacity"] for c in combos], jnp.float32)
+    per_combo = [
+        sampling_arrays(c["seed"], catalog_size, m, sample) for c in combos
+    ]
+    if sample == "poisson":
+        p = jnp.stack([pc[0] for pc in per_combo])
+    else:
+        p = jnp.zeros((len(combos), 1), jnp.float32)
+    if sample == "madow":
+        us = jnp.stack([pc[1] for pc in per_combo])
+        if len(set(c["capacity"] for c in combos)) > 1:
+            raise ValueError(
+                "madow sweeps need a single capacity (static sample count); "
+                "use sample='poisson' for capacity grids"
+            )
+        madow_capacity = int(capacities[0])
+    else:
+        us = jnp.zeros((len(combos), m), jnp.float32)
+        madow_capacity = None
+    step = _make_ogb_step(
+        batch, sample, projection, sweeps, iters, track_opt=False,
+        madow_capacity=madow_capacity,
+    )
+
+    def one(carry, eta, cap, p, us):
+        return jax.lax.scan(
+            lambda c, x: step(eta, p, cap, c, x), carry, (chunks, us)
+        )
+
+    vrun = jax.jit(
+        jax.vmap(one, in_axes=(0, 0, 0, 0, 0)), donate_argnums=(0,)
+    )
+    compiled = vrun.lower(carry, eta_arr, cap_arr, p, us).compile()
+    t0 = time.perf_counter()
+    _carry, (reward, hits, taus, occ) = compiled(carry, eta_arr, cap_arr, p, us)
+    jax.block_until_ready((reward, hits, taus, occ))
+    wall = time.perf_counter() - t0
+    opt = (
+        opt_hits_by_combo(np.asarray(trace[:t_used]), combos)
+        if track_opt
+        else np.zeros(len(combos))
+    )
+    return ReplaySweepResult(
+        combos=combos,
+        T=t_used,
+        batch=batch,
+        frac_reward=np.asarray(reward, np.float64),
+        hits=np.asarray(hits, np.int64),
+        taus=np.asarray(taus, np.float64),
+        occupancy=np.asarray(occ, np.float64),
+        opt_hits=opt,
+        wall_seconds=wall,
     )

@@ -1,0 +1,295 @@
+"""Named experiment scenarios: trace family x (N, T, C) x policy set.
+
+One registry maps the five synthetic trace families of
+:mod:`repro.cachesim.traces` to the paper figures they reproduce, so every
+benchmark, test and golden fixture names a scenario instead of re-stating
+sizes and seeds.  Each scenario carries a ``quick`` shape (minutes on one CPU
+core — CI scale) and a ``full`` shape (the paper's trace sizes, feasible now
+that every baseline runs device-resident).
+
+``run_scenario`` drives the whole policy set through the fast engines:
+
+* ``ogb``  -> :func:`repro.cachesim.replay.replay_trace` (lax.scan + warm
+  projection, Poisson sampling),
+* ``omd``  -> :func:`repro.cachesim.engines.run_omd` (mirror-descent scan),
+* ``lru/fifo/lfu/ftpl`` -> :func:`repro.cachesim.engines.run_engine`
+  (slot automata),
+* anything else (``arc``, ``gds``, ...) -> the host-side
+  :func:`repro.core.policies.make_policy` policy driven by
+  :func:`repro.cachesim.simulator.simulate` — the slow exact oracle, included
+  automatically only when the trace is short enough (``HOST_POLICY_MAX_T``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.cachesim import engines
+from repro.cachesim.traces import make_trace
+from repro.core.regret import best_static_hits
+
+#: host (pure-Python) policies are only simulated up to this trace length
+HOST_POLICY_MAX_T = 1_000_000
+
+#: the standard comparison set (paper Figs. 2, 7, 8)
+COMPARISON_POLICIES = ("ogb", "omd", "ftpl", "lru", "lfu", "fifo", "arc")
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One named experiment configuration.
+
+    ``trace_kw`` values may be callables ``(N, T) -> value`` for shape-derived
+    parameters (e.g. the shifting-zipf phase length).
+    """
+
+    name: str
+    figure: str  # paper figure this reproduces
+    claim: str  # the headline the figure substantiates
+    trace: str  # TRACE_REGISTRY key
+    quick: Tuple[int, int]  # (N, T) at CI scale
+    full: Tuple[int, int]  # (N, T) at paper scale
+    cap_div: int  # C = max(N // cap_div, 1)
+    policies: Tuple[str, ...] = COMPARISON_POLICIES
+    trace_kw: Tuple[Tuple[str, Any], ...] = ()
+    trace_seed: int = 0
+    batch: int = 1000  # OGB / OMD update batch
+
+    def dims(self, scale: str = "quick") -> Tuple[int, int, int]:
+        """(N, T, C) at the given scale ("mini", "quick" or "full").
+
+        "mini" is the golden-fixture scale: tiny enough for tier-1 tests,
+        derived from quick so it stays in the same regime.
+        """
+        if scale == "mini":
+            n = max(self.quick[0] // 10, 4 * self.cap_div)
+            return n, max(self.quick[1] // 10, 1000), max(n // self.cap_div, 1)
+        if scale not in ("quick", "full"):
+            raise ValueError(f"unknown scale {scale!r}")
+        n, t = self.quick if scale == "quick" else self.full
+        return n, t, max(n // self.cap_div, 1)
+
+    def make_trace(self, scale: str = "quick") -> np.ndarray:
+        n, t, _ = self.dims(scale)
+        kw = {
+            k: (v(n, t) if callable(v) else v) for k, v in self.trace_kw
+        }
+        return make_trace(self.trace, n, t, seed=self.trace_seed, **kw)
+
+
+SCENARIOS: Dict[str, Scenario] = {
+    s.name: s
+    for s in [
+        Scenario(
+            name="fig2_adversarial",
+            figure="Fig. 2",
+            claim="recency/frequency policies collapse on the round-robin "
+            "adversary while gradient policies track OPT = C/N",
+            trace="adversarial",
+            quick=(1_000, 60_000),
+            full=(1_000, 1_000_000),
+            cap_div=4,
+            trace_seed=0,
+            batch=500,
+        ),
+        Scenario(
+            name="fig7_ms_ex",
+            figure="Fig. 7 (left)",
+            claim="shifting popularity (ms-ex): online policies must track "
+            "the phase changes; OPT's windowed ratio is highly variable",
+            trace="shifting_zipf",
+            quick=(20_000, 200_000),
+            full=(1_000_000, 20_000_000),
+            cap_div=20,
+            trace_kw=(("alpha", 0.9), ("phase", lambda n, t: max(t // 8, 1))),
+            trace_seed=3,
+        ),
+        Scenario(
+            name="fig7_systor",
+            figure="Fig. 7 (right)",
+            claim="hot set + looping scans (systor/VDI): frequency beats "
+            "recency; gradient policies are robust to the scans",
+            trace="scan_mix",
+            quick=(20_000, 200_000),
+            full=(1_000_000, 20_000_000),
+            cap_div=20,
+            trace_seed=4,
+        ),
+        Scenario(
+            name="fig8_cdn",
+            figure="Fig. 8 (left)",
+            claim="near-stationary zipf (cdn): OPT >> LRU and the no-regret "
+            "policies approach OPT",
+            trace="zipf",
+            quick=(20_000, 200_000),
+            full=(1_000_000, 20_000_000),
+            cap_div=20,
+            trace_kw=(("alpha", 0.9),),
+            trace_seed=5,
+        ),
+        Scenario(
+            name="fig8_twitter",
+            figure="Fig. 8 (right)",
+            claim="bursty short-lived items (twitter): LRU beats the static "
+            "OPT; OGB stays robust; FTPL degenerates to noisy LFU",
+            trace="bursty",
+            quick=(20_000, 200_000),
+            full=(1_000_000, 20_000_000),
+            cap_div=20,
+            trace_kw=(
+                ("burst_fraction", 0.5),
+                ("burst_len_mean", 8.0),
+                ("burst_span", 60),
+            ),
+            trace_seed=6,
+        ),
+        Scenario(
+            name="fig11_cdn",
+            figure="Fig. 11 / §B.2",
+            claim="cdn items are long-lived: almost no attainable hits come "
+            "from items with lifetime < 100 requests",
+            trace="zipf",
+            quick=(20_000, 150_000),
+            full=(1_000_000, 20_000_000),
+            cap_div=20,
+            policies=(),
+            trace_kw=(("alpha", 0.9),),
+            trace_seed=11,
+        ),
+        Scenario(
+            name="fig11_twitter",
+            figure="Fig. 11 / §B.2",
+            claim="twitter gets ~20% of attainable hits from items with "
+            "lifetime < 100 requests — the regime where recency wins",
+            trace="bursty",
+            quick=(20_000, 150_000),
+            full=(1_000_000, 20_000_000),
+            cap_div=20,
+            policies=(),
+            trace_seed=12,
+        ),
+    ]
+}
+
+
+def get_scenario(name: str) -> Scenario:
+    if name not in SCENARIOS:
+        raise KeyError(
+            f"unknown scenario {name!r}; have {sorted(SCENARIOS)}"
+        )
+    return SCENARIOS[name]
+
+
+@dataclass
+class ScenarioResult:
+    scenario: str
+    scale: str
+    N: int
+    T: int
+    C: int
+    window: int
+    rows: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    skipped: Tuple[str, ...] = ()
+
+    def hit_ratio(self, policy: str) -> float:
+        return self.rows[policy]["hit_ratio"]
+
+    def to_json(self) -> Dict:
+        return {
+            "scenario": self.scenario,
+            "scale": self.scale,
+            "N": self.N,
+            "T": self.T,
+            "C": self.C,
+            "rows": self.rows,
+            "skipped": list(self.skipped),
+        }
+
+
+def run_scenario(
+    name: str,
+    scale: str = "quick",
+    policies: Optional[Sequence[str]] = None,
+    seed: int = 0,
+    window: Optional[int] = None,
+    include_host: Optional[bool] = None,
+    include_opt: bool = True,
+    trace: Optional[np.ndarray] = None,
+) -> ScenarioResult:
+    """Run one scenario's policy set through the device-resident engines.
+
+    Host-side (per-request Python) policies are skipped when the trace
+    exceeds ``HOST_POLICY_MAX_T`` unless ``include_host=True`` forces them.
+    Pass ``trace`` to reuse an already-generated trace (it must come from
+    ``scenario.make_trace(scale)`` for the result to be meaningful), and
+    ``include_opt=False`` to skip the host-side OPT(static) row when the
+    caller computes OPT itself (it is an O(T) pass over the trace).
+    """
+    from repro.cachesim.simulator import simulate
+    from repro.cachesim.replay import replay_trace
+    from repro.core.policies import make_policy
+
+    sc = get_scenario(name)
+    n, t, c = sc.dims(scale)
+    if trace is None:
+        trace = sc.make_trace(scale)
+    w = window or max(t // 20, 1)
+    batch = min(sc.batch, max(t // 20, 1))
+    if include_host is None:
+        include_host = t <= HOST_POLICY_MAX_T
+
+    res = ScenarioResult(
+        scenario=name, scale=scale, N=n, T=t, C=c, window=w
+    )
+    skipped = []
+    for kind in policies if policies is not None else sc.policies:
+        if kind == "ogb":
+            m = replay_trace(
+                trace, n, c, batch=batch, sample="poisson", seed=seed,
+                name="OGB",
+            )
+            res.rows["OGB"] = {
+                "hit_ratio": m.hit_ratio,
+                "frac_hit_ratio": m.frac_hit_ratio,
+                "regret": m.regret,
+                "us_per_request": m.us_per_request,
+            }
+        elif kind == "omd":
+            m = engines.run_omd(
+                trace, n, c, batch, sample="poisson", seed=seed, name="OMD"
+            )
+            res.rows["OMD"] = {
+                "hit_ratio": m.hit_ratio,
+                "frac_hit_ratio": m.frac_hit_ratio,
+                "regret": m.regret,
+                "us_per_request": m.us_per_request,
+            }
+        elif kind in engines.ENGINE_KINDS:
+            r = engines.run_engine(
+                kind, trace, n, c, window=w, seed=seed, horizon=t
+            )
+            res.rows[r.name] = {
+                "hit_ratio": r.hit_ratio,
+                "us_per_request": r.us_per_request,
+            }
+        else:  # host-side oracle policies (arc, gds, ...)
+            if not include_host:
+                skipped.append(kind)
+                continue
+            pol = make_policy(kind, n, c)
+            sr = simulate(pol, trace, window=w, record_cum=False)
+            res.rows[sr.name] = {
+                "hit_ratio": sr.hit_ratio,
+                "us_per_request": sr.us_per_request,
+            }
+    if include_opt:
+        t_opt = (len(trace) // batch) * batch if sc.policies else len(trace)
+        res.rows["OPT(static)"] = {
+            "hit_ratio": best_static_hits(np.asarray(trace[:t_opt]), c)
+            / max(t_opt, 1)
+        }
+    res.skipped = tuple(skipped)
+    return res

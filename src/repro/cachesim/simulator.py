@@ -102,6 +102,37 @@ def simulate(
 
 
 def compare(
-    policies: Dict[str, object], trace: np.ndarray, window: int = 100_000, **kw
+    policies,
+    trace: np.ndarray,
+    window: int = 100_000,
+    catalog_size: Optional[int] = None,
+    capacity: Optional[int] = None,
+    policy_kw: Optional[Dict[str, Dict]] = None,
+    **kw,
 ) -> Dict[str, SimResult]:
+    """Simulate several policies over one trace.
+
+    ``policies`` is either a mapping ``{name: policy-object}`` or an iterable
+    of kind strings resolved through the one shared registry
+    (:data:`repro.core.policies.POLICY_REGISTRY`) — pass ``catalog_size`` and
+    ``capacity`` in that case, plus optional per-kind constructor kwargs via
+    ``policy_kw={"ogb": {"horizon": T}, ...}``.  Keeping construction inside
+    the registry means this comparison set cannot drift from
+    ``make_policy`` / ``benchmarks.common.make_policies``.
+    """
+    if not isinstance(policies, dict):
+        from repro.core.policies import make_policy
+
+        if catalog_size is None or capacity is None:
+            raise ValueError(
+                "kind-string comparison needs catalog_size and capacity"
+            )
+        policy_kw = policy_kw or {}
+        built = {}
+        for kind in policies:
+            p = make_policy(
+                kind, catalog_size, capacity, **policy_kw.get(kind, {})
+            )
+            built[getattr(p, "name", kind)] = p
+        policies = built
     return {name: simulate(p, trace, window=window, **kw) for name, p in policies.items()}

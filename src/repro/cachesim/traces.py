@@ -167,54 +167,89 @@ def make_trace(kind: str, N: int, T: int, seed: int = 0, **kw) -> np.ndarray:
 # ---------------------------------------------------------------------------
 @dataclass
 class TraceStats:
+    """Per-item lifetime / attainable-hit statistics, fully vectorized.
+
+    The array form (``items`` / ``lifetimes`` / ``max_hits``, aligned) is the
+    fast path used at paper scale (T = 2e7); the dict views are materialized
+    lazily for the exploratory / test surface.
+    """
+
     catalog: int
     length: int
     unique: int
-    lifetime_by_item: Dict[int, int]
-    max_hits_by_item: Dict[int, int]  # requests-1 (infinite-cache hits)
+    items: np.ndarray  # (U,) item ids actually requested
+    lifetimes: np.ndarray  # (U,) last - first request position
+    max_hits: np.ndarray  # (U,) requests - 1 (infinite-cache hits)
+    _lifetime_dict: Optional[Dict[int, int]] = None
+    _max_hits_dict: Optional[Dict[int, int]] = None
+
+    @property
+    def lifetime_by_item(self) -> Dict[int, int]:
+        if self._lifetime_dict is None:
+            self._lifetime_dict = dict(
+                zip(self.items.tolist(), self.lifetimes.tolist())
+            )
+        return self._lifetime_dict
+
+    @property
+    def max_hits_by_item(self) -> Dict[int, int]:
+        if self._max_hits_dict is None:
+            self._max_hits_dict = dict(
+                zip(self.items.tolist(), self.max_hits.tolist())
+            )
+        return self._max_hits_dict
 
     def hit_share_lifetime_below(self, L: int) -> float:
         """Fraction of infinite-cache hits from items with lifetime < L
         (paper Fig 11 left)."""
-        tot = sum(self.max_hits_by_item.values())
+        tot = int(self.max_hits.sum())
         if tot == 0:
             return 0.0
-        short = sum(
-            h
-            for i, h in self.max_hits_by_item.items()
-            if self.lifetime_by_item[i] < L
-        )
-        return short / tot
+        return float(self.max_hits[self.lifetimes < L].sum()) / tot
 
 
 def trace_stats(trace: np.ndarray) -> TraceStats:
-    first: Dict[int, int] = {}
-    last: Dict[int, int] = {}
-    count: Dict[int, int] = {}
-    for t, j in enumerate(trace):
-        j = int(j)
-        if j not in first:
-            first[j] = t
-        last[j] = t
-        count[j] = count.get(j, 0) + 1
-    lifetime = {i: last[i] - first[i] for i in first}
-    max_hits = {i: count[i] - 1 for i in count}
+    """O(T + N) vectorized lifetime statistics (no per-request Python).
+
+    first/last positions fall out of two fancy-index writes: assigning
+    ``np.arange(T)`` at ``trace`` keeps the *last* write per item, and the
+    same assignment on the reversed trace keeps the *first*.
+    """
+    trace = np.asarray(trace, dtype=np.int64)
+    t_len = len(trace)
+    if t_len == 0:
+        e = np.empty(0, np.int64)
+        return TraceStats(0, 0, 0, e, e, e)
+    n = int(trace.max()) + 1
+    counts = np.bincount(trace, minlength=n)
+    pos = np.arange(t_len, dtype=np.int64)
+    last = np.full(n, -1, np.int64)
+    last[trace] = pos
+    first = np.full(n, -1, np.int64)
+    first[trace[::-1]] = t_len - 1 - pos
+    items = np.nonzero(counts)[0]
     return TraceStats(
-        catalog=int(trace.max()) + 1 if len(trace) else 0,
-        length=len(trace),
-        unique=len(first),
-        lifetime_by_item=lifetime,
-        max_hits_by_item=max_hits,
+        catalog=n,
+        length=t_len,
+        unique=len(items),
+        items=items,
+        lifetimes=last[items] - first[items],
+        max_hits=counts[items] - 1,
     )
 
 
 def reuse_distances(trace: np.ndarray) -> np.ndarray:
-    """Timestamp gaps between consecutive requests of the same item (Fig 11 right)."""
-    lastpos: Dict[int, int] = {}
-    out = []
-    for t, j in enumerate(trace):
-        j = int(j)
-        if j in lastpos:
-            out.append(t - lastpos[j])
-        lastpos[j] = t
-    return np.asarray(out, dtype=np.int64)
+    """Timestamp gaps between consecutive requests of the same item (Fig 11
+    right), ordered by the position of the later request.
+
+    Vectorized: a stable argsort groups each item's request positions in time
+    order, so within-group diffs are exactly the reuse gaps.
+    """
+    trace = np.asarray(trace, dtype=np.int64)
+    if len(trace) < 2:
+        return np.empty(0, dtype=np.int64)
+    order = np.argsort(trace, kind="stable")  # by item, time-ordered within
+    same = trace[order][1:] == trace[order][:-1]
+    gaps = (order[1:] - order[:-1])[same]
+    at = order[1:][same]  # position of the later request
+    return gaps[np.argsort(at, kind="stable")]

@@ -30,6 +30,24 @@ def theoretical_zeta(C: int, N: int, T: int) -> float:
     return (4.0 * math.pi * math.log(max(N, 2))) ** -0.25 * math.sqrt(T / C)
 
 
+def ftpl_noise(catalog_size: int, zeta: float, seed: int = 0) -> np.ndarray:
+    """The one-shot Gaussian perturbation zeta * gamma, as float32.
+
+    float32 on purpose: the device-resident scan engine
+    (:mod:`repro.cachesim.engines`) computes scores ``count + noise`` in
+    float32, and keeping the host policy on the identical grid makes the two
+    implementations bit-exactly comparable (same IEEE single-precision adds).
+    """
+    rng = np.random.default_rng(seed)
+    return (float(zeta) * rng.standard_normal(catalog_size)).astype(np.float32)
+
+
+def ftpl_initial_top_c(noise: np.ndarray, capacity: int) -> np.ndarray:
+    """Initial cache: top-C items of the noise alone (counts are all zero)."""
+    n = noise.shape[0]
+    return np.argpartition(noise, n - capacity)[n - capacity :].astype(np.int64)
+
+
 class FTPL:
     name = "FTPL"
 
@@ -48,21 +66,22 @@ class FTPL:
                 raise ValueError("pass zeta or horizon")
             zeta = theoretical_zeta(self.C, self.N, horizon)
         self.zeta = float(zeta)
-        rng = np.random.default_rng(seed)
-        self._noise = self.zeta * rng.standard_normal(self.N)
+        # float32 noise + float32 score adds: bit-identical to the scan engine
+        self._noise = ftpl_noise(self.N, self.zeta, seed=seed)
         self._counts: Dict[int, int] = {}
         self.cached: Dict[int, float] = {}
         self._order = make_store("sorted", seed=seed)  # (score, item), cached only
-        top = np.argpartition(self._noise, self.N - self.C)[self.N - self.C :]
-        for i in top:
-            s = float(self._noise[i])
+        for i in ftpl_initial_top_c(self._noise, self.C):
+            s = self._noise[i]
             self.cached[int(i)] = s
             self._order.insert(s, int(i))
         self.hits = 0
         self.requests = 0
 
-    def _score(self, i: int) -> float:
-        return self._counts.get(i, 0) + float(self._noise[i])
+    def _score(self, i: int) -> np.float32:
+        # python int + np.float32 stays float32 (value-based casting): the
+        # exact same IEEE add the jnp.float32 engine performs
+        return self._counts.get(i, 0) + self._noise[i]
 
     def contains(self, i: int) -> bool:
         return i in self.cached

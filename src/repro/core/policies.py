@@ -226,29 +226,58 @@ class ARC(_Base):
         return self._account(False)
 
 
+def _load_ogb(catalog_size, capacity, **kw):
+    from .ogb import OGB
+
+    return OGB(catalog_size, capacity, **kw)
+
+
+def _load_ogb_cl(catalog_size, capacity, **kw):
+    from .ogb_classic import OGBClassic
+
+    return OGBClassic(catalog_size, capacity, **kw)
+
+
+def _load_ftpl(catalog_size, capacity, **kw):
+    from .ftpl import FTPL
+
+    return FTPL(catalog_size, capacity, **kw)
+
+
+def _load_omd_cl(catalog_size, capacity, **kw):
+    from .omd import OMDClassic
+
+    return OMDClassic(catalog_size, capacity, **kw)
+
+
+#: THE policy registry — every constructor in the repo goes through this.
+#: ``simulator.compare``, ``benchmarks.common.make_policies`` and the scenario
+#: runner all resolve kind strings here, so the comparison sets cannot drift.
+#: Values are callables ``(catalog_size, capacity, **kw) -> policy``; the
+#: gradient/perturbed policies are lazy loaders to keep this module
+#: numpy-light and cycle-free.
 POLICY_REGISTRY = {
     "lru": LRU,
     "fifo": FIFO,
     "lfu": LFU,
     "gds": GDS,
     "arc": ARC,
+    "ogb": _load_ogb,
+    "ogb_cl": _load_ogb_cl,
+    "ftpl": _load_ftpl,
+    "omd_cl": _load_omd_cl,
 }
+
+
+def policy_kinds() -> tuple:
+    """All registered kind strings (host-side per-request policies)."""
+    return tuple(POLICY_REGISTRY)
 
 
 def make_policy(kind: str, catalog_size: int, capacity: int, **kw):
     kind = kind.lower()
-    if kind in POLICY_REGISTRY:
-        return POLICY_REGISTRY[kind](catalog_size, capacity, **kw)
-    if kind == "ogb":
-        from .ogb import OGB
-
-        return OGB(catalog_size, capacity, **kw)
-    if kind == "ogb_cl":
-        from .ogb_classic import OGBClassic
-
-        return OGBClassic(catalog_size, capacity, **kw)
-    if kind == "ftpl":
-        from .ftpl import FTPL
-
-        return FTPL(catalog_size, capacity, **kw)
-    raise ValueError(f"unknown policy {kind!r}")
+    if kind not in POLICY_REGISTRY:
+        raise ValueError(
+            f"unknown policy {kind!r}; registered: {sorted(POLICY_REGISTRY)}"
+        )
+    return POLICY_REGISTRY[kind](catalog_size, capacity, **kw)

@@ -1,0 +1,99 @@
+"""Golden-trace regression fixtures for the scenario registry.
+
+Each comparison scenario is replayed at "mini" scale through the real
+engines and checked against a committed snapshot
+(``tests/cachesim/golden/<scenario>.json``), so an engine refactor cannot
+silently shift hit ratios or regret.  The discrete automata are
+deterministic and are pinned tightly; the fractional engines (OGB/OMD) get a
+small float32 allowance for cross-XLA reduction-order drift.
+
+To regenerate after an *intentional* behavior change::
+
+    PYTHONPATH=src python -m pytest tests/cachesim/test_golden.py --update-golden
+
+and commit the resulting JSON diff deliberately.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.cachesim.scenarios import SCENARIOS, run_scenario
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+#: scenarios with a policy set (the fig11 entries are trace-stat only and are
+#: covered by the fig11 benchmark's calibration assertions)
+GOLDEN_SCENARIOS = sorted(
+    name for name, sc in SCENARIOS.items() if sc.policies
+)
+
+# deterministic integer-hit automata: pinned to the stored value exactly;
+# fractional float32 engines: small tolerance for reduction-order drift
+EXACT_ATOL = 1e-12
+FLOAT_ATOL = 5e-3
+FLOAT_ROWS = ("OGB", "OMD")
+
+
+def _golden_path(name: str) -> str:
+    return os.path.join(GOLDEN_DIR, f"{name}.json")
+
+
+def _snapshot(name: str) -> dict:
+    res = run_scenario(name, scale="mini")
+    rows = {}
+    for policy, row in sorted(res.rows.items()):
+        entry = {"hit_ratio": round(row["hit_ratio"], 10)}
+        if "regret" in row:
+            entry["regret"] = round(row["regret"], 6)
+        rows[policy] = entry
+    return {
+        "scenario": name,
+        "scale": "mini",
+        "N": res.N,
+        "T": res.T,
+        "C": res.C,
+        "rows": rows,
+    }
+
+
+@pytest.mark.parametrize("name", GOLDEN_SCENARIOS)
+def test_golden_scenario(name, request):
+    path = _golden_path(name)
+    snap = _snapshot(name)
+    if request.config.getoption("--update-golden"):
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+            f.write("\n")
+        pytest.skip(f"rewrote {path}")
+    assert os.path.exists(path), (
+        f"missing golden fixture {path}; run pytest with --update-golden "
+        "and commit it"
+    )
+    with open(path) as f:
+        golden = json.load(f)
+    assert snap["rows"].keys() == golden["rows"].keys(), (
+        snap["rows"].keys(),
+        golden["rows"].keys(),
+    )
+    assert (snap["N"], snap["T"], snap["C"]) == (
+        golden["N"],
+        golden["T"],
+        golden["C"],
+    ), "scenario mini dims changed — regenerate the goldens deliberately"
+    for policy, entry in golden["rows"].items():
+        atol = FLOAT_ATOL if policy in FLOAT_ROWS else EXACT_ATOL
+        got = snap["rows"][policy]
+        for metric, want in entry.items():
+            tol = atol if metric == "hit_ratio" else max(
+                FLOAT_ATOL * golden["T"], abs(want) * 5e-3
+            )
+            assert got[metric] == pytest.approx(want, abs=tol), (
+                name,
+                policy,
+                metric,
+                got[metric],
+                want,
+            )

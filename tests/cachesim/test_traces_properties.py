@@ -1,0 +1,105 @@
+"""Hypothesis property tests for the trace generators (real-or-stub).
+
+Uses the PR-2 conftest pattern: the real ``hypothesis`` when installed, the
+vendored deterministic stub otherwise — either way these run in tier-1.
+
+Invariants per generator: ids always in [0, N), exact length, int64 dtype,
+determinism per seed; the adversarial round-robin covers the whole catalog
+every round; ``trace_stats`` lifetime/max-hit identities hold for arbitrary
+traces (they are exact combinatorial facts, not approximations).
+"""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cachesim.traces import (
+    TRACE_REGISTRY,
+    adversarial,
+    make_trace,
+    reuse_distances,
+    trace_stats,
+)
+
+GENERATOR_KINDS = sorted(set(TRACE_REGISTRY))
+
+
+@given(
+    kind=st.sampled_from(GENERATOR_KINDS),
+    n=st.integers(8, 600),
+    t=st.integers(1, 3000),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_ids_in_range_and_deterministic(kind, n, t, seed):
+    a = make_trace(kind, n, t, seed=seed)
+    b = make_trace(kind, n, t, seed=seed)
+    assert a.dtype == np.int64
+    assert len(a) == t
+    assert a.min() >= 0 and a.max() < n
+    np.testing.assert_array_equal(a, b)
+
+
+@given(
+    n=st.integers(4, 300),
+    rounds=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_adversarial_covers_catalog_each_round(n, rounds, seed):
+    tr = adversarial(n, rounds * n, seed=seed)
+    for r in range(rounds):
+        chunk = tr[r * n : (r + 1) * n]
+        assert len(set(chunk.tolist())) == n  # a permutation: full coverage
+
+
+@given(
+    n=st.integers(4, 200),
+    t=st.integers(1, 2000),
+    kind=st.sampled_from(GENERATOR_KINDS),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_trace_stats_lifetime_invariants(n, t, kind, seed):
+    tr = make_trace(kind, n, t, seed=seed)
+    st_ = trace_stats(tr)
+    assert st_.length == t
+    assert st_.unique == len(np.unique(tr))
+    assert st_.catalog == int(tr.max()) + 1
+    # lifetimes: bounded by the horizon; zero iff the item appears once in a
+    # single position-cluster sense (first == last)
+    assert np.all(st_.lifetimes >= 0) and np.all(st_.lifetimes <= t - 1)
+    counts = np.bincount(tr)
+    counts = counts[counts > 0]
+    np.testing.assert_array_equal(np.sort(st_.max_hits), np.sort(counts - 1))
+    # total attainable (infinite-cache) hits = T - #unique items
+    assert int(st_.max_hits.sum()) == t - st_.unique
+    # a lifetime of L needs at least 2 requests, and at most L+1 distinct
+    # positions fit in a window of L+1
+    multi = st_.max_hits >= 1
+    assert np.all(st_.lifetimes[multi] >= 1)
+    assert np.all(st_.max_hits <= st_.lifetimes)
+    # dict views agree with the array fast path
+    assert st_.lifetime_by_item == dict(
+        zip(st_.items.tolist(), st_.lifetimes.tolist())
+    )
+
+
+@given(
+    n=st.integers(2, 50),
+    t=st.integers(2, 800),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_reuse_distances_match_bruteforce(n, t, seed):
+    rng = np.random.default_rng(seed)
+    tr = rng.integers(0, n, size=t)
+    got = reuse_distances(tr)
+    lastpos, expect = {}, []
+    for pos, j in enumerate(tr.tolist()):
+        if j in lastpos:
+            expect.append(pos - lastpos[j])
+        lastpos[j] = pos
+    np.testing.assert_array_equal(got, np.asarray(expect, np.int64))
+    # every item with k requests contributes exactly k-1 distances
+    assert len(got) == t - len(np.unique(tr))

@@ -22,3 +22,13 @@ except ImportError:
 # part of the library proper — no collection gating.  Genuinely optional deps
 # are handled per-module (the hypothesis shim above; pytest.importorskip at
 # the test site for anything else).
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden",
+        action="store_true",
+        default=False,
+        help="rewrite tests/cachesim/golden/*.json from the current engines "
+        "instead of asserting against them (commit the diff deliberately)",
+    )

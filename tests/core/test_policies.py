@@ -94,3 +94,72 @@ def test_make_policy_registry():
     p.request(1)
     p = make_policy("ftpl", 100, 10, zeta=1.0)
     p.request(1)
+    p = make_policy("omd_cl", 100, 10, eta=0.01)
+    p.request(1)
+
+
+def test_one_shared_registry():
+    """make_policy, simulator.compare and benchmarks.common.make_policies all
+    resolve through POLICY_REGISTRY — the kind-string sets cannot drift."""
+    import numpy as np
+
+    from repro.cachesim.simulator import compare
+    from repro.core.policies import POLICY_REGISTRY, policy_kinds
+
+    assert set(policy_kinds()) == set(POLICY_REGISTRY)
+    # every registered kind is constructible through the registry
+    kw = {
+        "ogb": {"eta": 0.01},
+        "ogb_cl": {"eta": 0.01},
+        "omd_cl": {"eta": 0.01},
+        "ftpl": {"zeta": 1.0},
+    }
+    for kind in policy_kinds():
+        make_policy(kind, 64, 8, **kw.get(kind, {})).request(3)
+    # compare() accepts kind strings and builds via the same registry
+    trace = np.array([1, 2, 1, 3, 2, 1], dtype=np.int64)
+    out = compare(
+        ["lru", "ftpl"],
+        trace,
+        window=3,
+        catalog_size=64,
+        capacity=8,
+        policy_kw={"ftpl": {"zeta": 1.0}},
+    )
+    assert set(out) == {"LRU", "FTPL"}
+    host = LRU(64, 8)
+    hits = sum(host.request(int(j)) for j in trace)
+    assert out["LRU"].hits == hits
+    import pytest
+
+    with pytest.raises(ValueError):
+        make_policy("nope", 10, 2)
+    with pytest.raises(ValueError):
+        compare(["lru"], trace)  # kind strings need catalog_size/capacity
+
+
+def test_benchmarks_make_policies_uses_registry(monkeypatch):
+    import sys
+
+    sys.path.insert(0, ".")
+    try:
+        from benchmarks.common import make_policies
+    except ImportError:
+        import pytest
+
+        pytest.skip("benchmarks package not importable from this rootdir")
+    finally:
+        sys.path.pop(0)
+    seen = []
+    import repro.core.policies as polmod
+
+    real = polmod.make_policy
+
+    def spy(kind, *a, **k):
+        seen.append(kind)
+        return real(kind, *a, **k)
+
+    monkeypatch.setattr(polmod, "make_policy", spy)
+    out = make_policies(100, 10, T=1000)
+    assert set(out) == {"OGB", "FTPL", "LRU", "LFU", "ARC"}
+    assert set(seen) == {"ogb", "ftpl", "lru", "lfu", "arc"}
