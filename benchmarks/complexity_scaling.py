@@ -12,7 +12,7 @@ import time
 
 import numpy as np
 
-from repro.cachesim.replay import replay_trace
+from repro.cachesim.api import policy_def, run as api_run
 from repro.cachesim.traces import zipf
 from repro.core.ftpl import FTPL
 from repro.core.ogb import OGB
@@ -44,10 +44,12 @@ def main() -> dict:
             us = 1e6 * (time.perf_counter() - t0) / t_use
             row[name] = us
             csv_row(f"complexity/N={N}/{name}", us, f"C={C}")
-        # the scan-compiled batched data plane (B=1000); first call compiles,
-        # second measures the steady state
-        replay_trace(trace, N, C, batch=B_scan, seed=13)
-        m = replay_trace(trace, N, C, batch=B_scan, seed=13)
+        # the scan-compiled batched data plane (B=1000); api.run compiles
+        # ahead of time, so the measured wall is the steady-state replay
+        m = api_run(
+            policy_def("ogb"), trace, N, C, window=B_scan, seed=13,
+            track_opt=False,
+        )
         row["OGB_scan_B1000"] = m.us_per_request
         csv_row(f"complexity/N={N}/OGB_scan_B1000", m.us_per_request, f"C={C}")
         out[N] = row

@@ -1,17 +1,18 @@
 """Baseline-engine replay throughput — the apples-to-apples speed ledger.
 
 Replays a fig7_8-class trace (zipf 0.9, N=20k, C=N/20) of T=1e6 requests
-through every device-resident baseline automaton (LRU/FIFO/LFU/FTPL), the
-OMD mirror-descent engine and the OGB scan replay, on whatever backend JAX
-picks (CPU in CI).  The acceptance bar is **< 15 us/request for every
-baseline** — the bound that makes the paper-scale (T=2e7) comparison runs
-feasible.  A short host-side LRU run is timed for the speedup column.
+through every registered policy engine (LRU/FIFO/LFU/FTPL automata, the OMD
+mirror-descent engine and the OGB scan replay) via the one unified
+``api.run`` path, on whatever backend JAX picks (CPU in CI).  The acceptance
+bar is **< 15 us/request for every policy** — the bound that makes the
+paper-scale (T=2e7) comparison runs feasible.  A short host-side LRU run is
+timed for the speedup column.
 
 Writes ``benchmarks/results/engines_throughput.json`` and the tracked
 top-level ``BENCH_engines.json`` so the perf trajectory is visible PR over
 PR (same pattern as ``BENCH_throughput.json``).
 
-Also exercises the vmapped sweep layer: one (capacities x seeds) LRU grid
+Also exercises the unified sweep layer: one (capacities x seeds) LRU grid
 must cost close to a single replay, not |grid| replays.
 """
 
@@ -24,8 +25,7 @@ import numpy as np
 
 import jax
 
-from repro.cachesim.engines import run_engine, run_omd, sweep_engine
-from repro.cachesim.replay import replay_trace
+from repro.cachesim.api import policy_def, run, sweep
 from repro.cachesim.simulator import simulate
 from repro.cachesim.traces import zipf
 from repro.core.policies import make_policy
@@ -55,8 +55,10 @@ def main() -> dict:
         "engines": {},
     }
 
-    for kind in ("lru", "fifo", "lfu", "ftpl"):
-        r = run_engine(kind, trace, N, C, window=max(T // 100, 1), horizon=T)
+    for kind in ("lru", "fifo", "lfu", "ftpl", "omd", "ogb"):
+        pd = policy_def(kind)
+        window = B if pd.fractional else max(T // 100, 1)
+        r = run(pd, trace, N, C, window=window, horizon=T, track_opt=False)
         out["engines"][r.name] = {
             "us_per_request": r.us_per_request,
             "hit_ratio": r.hit_ratio,
@@ -64,18 +66,6 @@ def main() -> dict:
         csv_row(
             f"engines/{r.name}", r.us_per_request, f"hit_ratio={r.hit_ratio:.4f}"
         )
-    m = run_omd(trace, N, C, B)
-    out["engines"]["OMD"] = {
-        "us_per_request": m.us_per_request,
-        "hit_ratio": m.hit_ratio,
-    }
-    csv_row("engines/OMD", m.us_per_request, f"hit_ratio={m.hit_ratio:.4f}")
-    m = replay_trace(trace, N, C, batch=B, name="OGB")
-    out["engines"]["OGB"] = {
-        "us_per_request": m.us_per_request,
-        "hit_ratio": m.hit_ratio,
-    }
-    csv_row("engines/OGB", m.us_per_request, f"hit_ratio={m.hit_ratio:.4f}")
 
     # host-side reference point (short run; the engines replace this loop)
     t_host = min(T, 100_000)
@@ -88,16 +78,18 @@ def main() -> dict:
 
     # vmapped sweep amortization: a 6-combo LRU grid in one dispatch
     sweep_t = min(T, 200_000)
-    sw = sweep_engine(
-        "lru",
+    sw = sweep(
+        policy_def("lru"),
         trace[:sweep_t],
         N,
         capacities=[C // 4, C // 2, C],
         seeds=(0, 1),
         window=max(sweep_t // 20, 1),
+        track_opt=False,
     )
-    single = run_engine(
-        "lru", trace[:sweep_t], N, C, window=max(sweep_t // 20, 1)
+    single = run(
+        policy_def("lru"), trace[:sweep_t], N, C,
+        window=max(sweep_t // 20, 1), track_opt=False,
     )
     out["sweep"] = {
         "combos": len(sw.combos),

@@ -2,14 +2,15 @@
 
 cdn-like traffic is insensitive to B (items re-requested throughout);
 twitter-like traffic loses hits once B exceeds the burst lifetime.
-Fractional rewards computed with the scan-compiled replay engine
-(repro.cachesim.replay) — the whole B-sweep runs on device."""
+Fractional rewards computed with the unified scan engine
+(``api.run(policy_def("ogb", sample="none"), ...)``) — the whole B-sweep
+runs on device."""
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.cachesim.replay import replay_trace
+from repro.cachesim.api import policy_def, run
 from repro.cachesim.traces import bursty, zipf
 from repro.core.ogb import theoretical_eta
 
@@ -19,8 +20,9 @@ from .common import csv_row, save_json, scale, timed
 def run_fractional(trace: np.ndarray, N: int, C: int, B: int) -> float:
     T = len(trace)
     eta = theoretical_eta(C, N, T, B)
-    m = replay_trace(
-        trace, N, C, batch=B, eta=eta, sample="none", track_opt=False
+    m = run(
+        policy_def("ogb", sample="none"), trace, N, C,
+        window=B, eta=eta, track_opt=False,
     )
     return m.frac_hit_ratio
 

@@ -6,6 +6,7 @@ runs; default sizes finish in minutes on one CPU core.
 
   python -m benchmarks.run            # all figures
   python -m benchmarks.run fig2 fig9  # a subset
+  python -m benchmarks.run --list     # print registered suite names
 """
 
 from __future__ import annotations
@@ -53,6 +54,10 @@ SUITES["roofline"] = _roofline
 
 
 def main() -> None:
+    if any(a in ("--list", "-l") for a in sys.argv[1:]):
+        for name in sorted(SUITES):
+            print(name)
+        return
     wanted = sys.argv[1:] or list(SUITES)
     # a typo'd suite name must fail the run, not silently skip the suite
     unknown = [n for n in wanted if n not in SUITES]

@@ -1,51 +1,49 @@
-"""Quickstart: the paper's policy in 40 lines.
+"""Quickstart: the paper's policy through the public API, in 40 lines.
 
-Runs OGB against LRU/LFU/FTPL and the optimal static allocation on an
-adversarial trace (paper Fig. 2) and on a stationary cdn-like trace; prints
-hit ratios and the regret trajectory.
+Runs OGB against OMD/LRU/LFU/FTPL and the optimal static allocation on an
+adversarial trace (paper Fig. 2) and on a stationary cdn-like trace — every
+policy is an optax-style ``(init, step)`` PolicyDef replayed by the one
+``repro.run`` engine (a single compiled ``lax.scan``).  Also demonstrates
+the streaming-carry contract: resuming a replay chunk by chunk reproduces
+the one-shot run bit for bit.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.cachesim.simulator import simulate
-from repro.cachesim.traces import adversarial, zipf
-from repro.core import (
-    FTPL,
-    LFU,
-    LRU,
-    OGB,
-    best_static_hits,
-    regret_curve,
-    theoretical_regret_bound,
-)
+from repro import make_trace, policy_def, run
 
 
 def main():
-    N, C, T = 2000, 500, 100_000
+    N, C, T, B = 2000, 500, 100_000, 500
 
     for name, trace in {
-        "adversarial (paper Fig.2)": adversarial(N, T, seed=0),
-        "cdn-like zipf": zipf(N, T, alpha=0.9, seed=0),
+        "adversarial (paper Fig.2)": make_trace("adversarial", N, T, seed=0),
+        "cdn-like zipf": make_trace("zipf", N, T, seed=0, alpha=0.9),
     }.items():
         print(f"\n=== {name}:  N={N} C={C} T={T}")
-        opt = best_static_hits(trace, C)
-        print(f"  OPT (best static in hindsight): {opt / T:.4f}")
-        for policy in [
-            OGB(N, C, horizon=T),  # eta per Theorem 3.1
-            FTPL(N, C, horizon=T),
-            LRU(N, C),
-            LFU(N, C),
-        ]:
-            res = simulate(policy, trace, window=T)
-            reg = regret_curve(res.cum_hits, trace, C)
+        for kind in ("ogb", "omd", "ftpl", "lru", "lfu"):
+            pd = policy_def(kind)
+            res = run(pd, trace, N, C, window=B, horizon=T)
             print(
-                f"  {policy.name:>5}: hit={res.hit_ratio:.4f}  "
-                f"final regret={reg[-1]:>8d}  "
-                f"(Thm 3.1 bound {theoretical_regret_bound(C, N, T):,.0f})  "
-                f"{res.us_per_request:.1f}us/req"
+                f"  {res.name:>5}: hit={res.hit_ratio:.4f}  "
+                f"OPT={res.opt_hits / res.T:.4f}  "
+                f"regret={res.integral_regret:>9.1f}  "
+                f"{res.us_per_request:.2f}us/req"
             )
+
+    # streaming: two chunked runs with a handed-off carry == one full run
+    trace = make_trace("zipf", N, T, seed=1, alpha=0.9)
+    full = run(policy_def("ogb"), trace, N, C, window=B, eta=0.01)
+    first = run(policy_def("ogb"), trace[: T // 2], N, C, window=B, eta=0.01,
+                track_opt=False)
+    second = run(policy_def("ogb"), trace[T // 2 :], capacity=C, window=B,
+                 carry=first.carry, track_opt=False)
+    resumed = np.concatenate([first.hits, second.hits])
+    assert np.array_equal(resumed, full.hits)
+    print(f"\nstreamed replay == one-shot replay "
+          f"({int(resumed.sum())} hits either way)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,59 @@
+"""Public surface of the OGB caching reproduction.
+
+The supported entry points live here so examples and docs can say::
+
+    from repro import policy_def, run, sweep
+
+    result = run(policy_def("ogb"), trace, catalog_size, capacity, window=1000)
+
+Everything is re-exported lazily (resolving an attribute imports the owning
+module on first use), so ``import repro`` stays cheap and the config/model
+subpackages never pull JAX-heavy cachesim code they don't need.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+__version__ = "0.1.0"
+
+#: attribute name -> owning module (resolved lazily via module __getattr__)
+_LAZY = {
+    # the policy protocol + the one execution layer
+    "PolicyDef": "repro.cachesim.api",
+    "StepOut": "repro.cachesim.api",
+    "policy_def": "repro.cachesim.api",
+    "policy_def_kinds": "repro.cachesim.api",
+    "register_policy_def": "repro.cachesim.api",
+    "run": "repro.cachesim.api",
+    "sweep": "repro.cachesim.api",
+    # result views
+    "RunResult": "repro.cachesim.results",
+    "SweepResult": "repro.cachesim.results",
+    # host-side policies (the slow exact oracles) + per-request simulator
+    "make_policy": "repro.core.policies",
+    "policy_kinds": "repro.core.policies",
+    "simulate": "repro.cachesim.simulator",
+    "compare": "repro.cachesim.simulator",
+    # named experiment scenarios and trace families
+    "SCENARIOS": "repro.cachesim.scenarios",
+    "get_scenario": "repro.cachesim.scenarios",
+    "run_scenario": "repro.cachesim.scenarios",
+    "make_trace": "repro.cachesim.traces",
+}
+
+__all__ = ["__version__", *sorted(_LAZY)]
+
+
+def __getattr__(name: str):
+    try:
+        module = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}") from None
+    value = getattr(importlib.import_module(module), name)
+    globals()[name] = value  # cache: next access skips this hook
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

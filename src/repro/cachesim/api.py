@@ -1,0 +1,621 @@
+"""One optax-style policy protocol behind a single run/sweep engine.
+
+The paper's thesis is that gradient-based caching (OGB) and its no-regret
+cousins (OMD, FTPL) are interchangeable points in one online-optimization
+design space.  This module makes the code say so: every policy — fractional
+gradient policies and discrete slot automata alike — is a
+
+    :class:`PolicyDef`:
+        ``init(catalog_size, capacity, *, seed, eta, horizon, n_slots)
+        -> carry``          (a pytree ``NamedTuple`` of device arrays)
+        ``step(carry, request_ids) -> (carry, StepOut)``   (pure, scannable)
+
+and exactly one execution layer drives them all:
+
+* :func:`run` — a single donated-carry ``lax.scan`` over the chunked trace.
+  Resumable: it accepts and returns the carry, so a trace can be streamed
+  chunk by chunk (the serving integration uses the same contract one step
+  at a time).
+* :func:`sweep` — one ``vmap``-ped dispatch over a (capacities x seeds x
+  etas) grid of stacked carries, capacity-padded for the automata.
+
+Adding a policy, a sweep axis, or a serving integration is one
+registration (:func:`register_policy_def`) — not a fourth execution stack.
+All per-combo parameters (eta, capacity, sampling randomness) live *in the
+carry* as traced arrays, which is what makes one compiled step serve both
+the single replay and the whole grid.
+
+Hindsight static-OPT is computed host-side from the trace histogram (exact
+int64, cheaper than carrying per-combo count arrays on device).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.cachesim import engines as _engines
+from repro.cachesim.replay import (
+    _make_ogb_step,
+    opt_hits_by_combo,
+    sampling_keys,
+)
+from repro.cachesim.results import RunResult, SweepResult
+from repro.core.ogb import theoretical_eta
+from repro.core.omd import theoretical_eta_omd
+from repro.core.policies import ENGINE_DEFS, register_engine_def
+from repro.core.regret import best_static_hits
+from repro.jaxcache.fractional import (
+    DEFAULT_BISECT_ITERS,
+    DEFAULT_WARM_SWEEPS,
+    capped_simplex_project,
+    permanent_random_numbers,
+)
+
+__all__ = [
+    "PolicyDef",
+    "StepOut",
+    "RunResult",
+    "SweepResult",
+    "policy_def",
+    "policy_def_kinds",
+    "register_policy_def",
+    "run",
+    "sweep",
+]
+
+
+class StepOut(NamedTuple):
+    """Per-chunk observables every policy step emits.
+
+    ``reward`` is the *pre-update* fractional reward (OCO order) — equal to
+    ``hits`` for the integral automata; ``aux`` is the projection threshold
+    (tau for OGB, lambda for OMD, 0 for automata)."""
+
+    reward: jax.Array  # () float32
+    hits: jax.Array  # () int32
+    aux: jax.Array  # () float32
+    occupancy: jax.Array  # () float32
+
+
+@dataclass(frozen=True)
+class PolicyDef:
+    """An optax-style ``(init, step)`` caching policy.
+
+    ``init`` builds the carry — a pytree ``NamedTuple`` holding the policy
+    state *and* its traced parameters (eta, capacity, sampling randomness),
+    so ``step`` is a pure function of ``(carry, request_ids)`` and a stack
+    of carries vmaps into a parameter sweep.  ``default_eta`` resolves
+    ``eta=None`` at :func:`run`/:func:`sweep` time from
+    ``(catalog_size, capacity, horizon, window)``.
+    """
+
+    kind: str
+    name: str  # display name used in result rows ("OGB", "LRU", ...)
+    init: Callable[..., Any]
+    step: Callable[[Any, jax.Array], Tuple[Any, StepOut]]
+    fractional: bool = False
+    default_eta: Optional[Callable[[int, int, int, int], float]] = None
+    #: step consumes request-id chunks (False for gradient-vector flavors
+    #: like ogb_grad, which stream dense per-item weights instead and are
+    #: excluded from trace replays/scenario sweeps)
+    trace_driven: bool = True
+
+
+# ---------------------------------------------------------------------------
+# registry — backed by the core policy table (core/policies.ENGINE_DEFS)
+# ---------------------------------------------------------------------------
+def register_policy_def(kind: str, factory: Callable[..., PolicyDef]) -> None:
+    """Register a :class:`PolicyDef` factory under a kind string.
+
+    ``factory(**static_options) -> PolicyDef``; static options are things
+    that change the compiled step (sample mode, projection flavor, sweep
+    counts) as opposed to traced parameters, which belong in the carry.
+    """
+    register_engine_def(kind, factory)
+
+
+def policy_def_kinds() -> tuple:
+    """All registered device-engine kind strings."""
+    return tuple(ENGINE_DEFS)
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_def(kind: str, options: tuple) -> PolicyDef:
+    return ENGINE_DEFS[kind](**dict(options))
+
+
+def policy_def(kind: str, **options) -> PolicyDef:
+    """Resolve a registered kind to a (memoized) :class:`PolicyDef`.
+
+    Memoization matters: the returned def's ``step`` identity keys the
+    compiled-executable cache, so repeat calls reuse compilations.
+    """
+    kind = kind.lower()
+    if kind not in ENGINE_DEFS:
+        raise KeyError(
+            f"unknown policy kind {kind!r}; registered: {sorted(ENGINE_DEFS)}"
+        )
+    return _cached_def(kind, tuple(sorted(options.items())))
+
+
+# ---------------------------------------------------------------------------
+# the one execution layer
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _scan_jit(step):
+    def run_fn(carry, chunks):
+        return jax.lax.scan(step, carry, chunks)
+
+    return jax.jit(run_fn, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def _sweep_jit(step):
+    def one(carry, chunks):
+        return jax.lax.scan(step, carry, chunks)
+
+    return jax.jit(jax.vmap(one, in_axes=(0, None)), donate_argnums=(0,))
+
+
+_EXEC_CACHE: dict = {}
+
+
+def _compiled(jitted, carry, chunks):
+    """AOT-compiled executable, memoized on (step, carry/chunk shapes).
+
+    ``jit.lower().compile()`` bypasses jit's own call cache, so without this
+    every :func:`run` would recompile; with it, repeated runs of the same
+    shapes (goldens, parity tests, benchmark repeats) compile once."""
+    key = (
+        id(jitted),  # _scan_jit/_sweep_jit are memoized, so ids are stable
+        chunks.shape,
+        jax.tree.structure(carry),
+        tuple((x.shape, str(x.dtype)) for x in jax.tree.leaves(carry)),
+    )
+    if key not in _EXEC_CACHE:
+        _EXEC_CACHE[key] = jitted.lower(carry, chunks).compile()
+    return _EXEC_CACHE[key]
+
+
+def _chunked(trace: np.ndarray, window: int):
+    trace = np.asarray(trace)
+    m = len(trace) // window
+    if m == 0:
+        raise ValueError(
+            f"trace shorter than one window ({len(trace)} < {window})"
+        )
+    t_used = m * window
+    return (
+        jnp.asarray(trace[:t_used].reshape(m, window), jnp.int32),
+        trace[:t_used],
+        t_used,
+    )
+
+
+def run(
+    pd: PolicyDef,
+    trace: np.ndarray,
+    catalog_size: Optional[int] = None,
+    capacity: Optional[int] = None,
+    *,
+    window: int = 1000,
+    carry: Any = None,
+    seed: int = 0,
+    eta: Optional[float] = None,
+    horizon: Optional[int] = None,
+    n_slots: Optional[int] = None,
+    track_opt: bool = True,
+    keep_carry: bool = True,
+    name: Optional[str] = None,
+    **init_kw,
+) -> RunResult:
+    """Replay a whole trace through one policy: a single donated-carry scan.
+
+    The trace is reshaped into ``(T // window, window)`` chunks (a trailing
+    partial chunk is dropped); ``window`` is the OGB/OMD update batch B and
+    the hit-accounting granularity for the automata.  ``eta=None`` resolves
+    through ``pd.default_eta`` for the replayed horizon.
+
+    **Streaming contract:** pass ``carry=result.carry`` from a previous call
+    to resume exactly where it left off — two chunked runs replay the same
+    dynamics as one full run, bit for bit.  The carry is *donated* to the
+    device computation, so hand it off (references kept to a resumed-from
+    carry are invalidated).  When resuming, ``catalog_size`` is not needed;
+    ``capacity`` is still used for OPT/bookkeeping, and the init-time
+    parameters (``seed``/``eta``/``horizon``/...) must not be passed — the
+    carry already holds them.  Pass ``keep_carry=False`` when the result is
+    only read for metrics: the final carry is several (N,)-sized device
+    arrays, and dropping it releases that memory immediately (results
+    accumulated in a sweep loop otherwise pin it for their lifetime).
+    """
+    chunks, trace_used, t_used = _chunked(trace, window)
+    extras = {}
+    if carry is None:
+        if catalog_size is None or capacity is None:
+            raise ValueError("run() needs catalog_size and capacity (or carry=)")
+        if eta is None and pd.default_eta is not None:
+            eta = pd.default_eta(
+                int(catalog_size), int(capacity), t_used, window
+            )
+        carry = pd.init(
+            int(catalog_size),
+            int(capacity),
+            seed=seed,
+            eta=eta,
+            horizon=int(horizon) if horizon is not None else t_used,
+            n_slots=n_slots,
+            **init_kw,
+        )
+        if eta is not None:
+            extras["eta"] = float(eta)
+    elif (
+        eta is not None
+        or horizon is not None
+        or n_slots is not None
+        or seed != 0
+        or any(v is not None for v in init_kw.values())
+    ):
+        # a resumed run takes every policy parameter from the carry; a
+        # silently-ignored eta or seed would mislabel sweep results
+        raise ValueError(
+            "run(carry=...) resumes with the carry's parameters; do not "
+            "pass seed/eta/horizon/n_slots/init kwargs alongside a carry"
+        )
+    compiled = _compiled(_scan_jit(pd.step), carry, chunks)
+    t0 = time.perf_counter()
+    carry, out = compiled(carry, chunks)
+    jax.block_until_ready((carry, out))
+    wall = time.perf_counter() - t0
+    opt = (
+        float(best_static_hits(trace_used, int(capacity)))
+        if (track_opt and capacity is not None)
+        else 0.0
+    )
+    return RunResult(
+        name=name or pd.name,
+        kind=pd.kind,
+        T=t_used,
+        window=window,
+        capacity=int(capacity) if capacity is not None else -1,
+        reward=np.asarray(out.reward, np.float64),
+        hits=np.asarray(out.hits, np.int64),
+        aux=np.asarray(out.aux, np.float64),
+        occupancy=np.asarray(out.occupancy, np.float64),
+        opt_hits=opt,
+        carry=carry if keep_carry else None,
+        wall_seconds=wall,
+        extras=extras,
+    )
+
+
+def sweep(
+    pd: PolicyDef,
+    trace: np.ndarray,
+    catalog_size: int,
+    capacities: Sequence[int],
+    *,
+    etas: Sequence[Optional[float]] = (None,),
+    seeds: Sequence[int] = (0,),
+    window: int = 1000,
+    horizon: Optional[int] = None,
+    track_opt: bool = True,
+    **init_kw,
+) -> SweepResult:
+    """Run a whole (seeds x etas x capacities) grid in one vmapped dispatch.
+
+    One carry per combo is built by ``pd.init`` (automata are padded to
+    ``max(capacities)`` slots so the stacked carries share a shape), the
+    stack is ``vmap``-ed over with the trace broadcast, and the entire grid
+    costs one compile + one device round-trip.  ``eta=None`` entries resolve
+    to ``pd.default_eta`` for that combo's capacity, so default-tuned sweep
+    rows reproduce default-tuned single runs exactly.  OPT is computed
+    host-side per capacity (it depends only on the trace histogram).
+    """
+    chunks, trace_used, t_used = _chunked(trace, window)
+    if horizon is None:
+        horizon = t_used
+    n_slots = int(max(capacities))
+    combos, carries = [], []
+    for s in seeds:
+        for eta in etas:
+            for C in capacities:
+                e = eta
+                if e is None and pd.default_eta is not None:
+                    e = pd.default_eta(
+                        int(catalog_size), int(C), t_used, window
+                    )
+                combo = {"capacity": int(C), "seed": int(s)}
+                if pd.fractional:
+                    combo["eta"] = float(e)
+                combos.append(combo)
+                carries.append(
+                    pd.init(
+                        int(catalog_size),
+                        int(C),
+                        seed=int(s),
+                        eta=e,
+                        horizon=int(horizon),
+                        n_slots=n_slots,
+                        **init_kw,
+                    )
+                )
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *carries)
+    compiled = _compiled(_sweep_jit(pd.step), stacked, chunks)
+    t0 = time.perf_counter()
+    _carry, out = compiled(stacked, chunks)
+    jax.block_until_ready(out)
+    wall = time.perf_counter() - t0
+    opt = (
+        opt_hits_by_combo(trace_used, combos)
+        if track_opt
+        else np.zeros(len(combos))
+    )
+    return SweepResult(
+        kind=pd.kind,
+        combos=combos,
+        T=t_used,
+        window=window,
+        reward=np.asarray(out.reward, np.float64),
+        hits=np.asarray(out.hits, np.int64),
+        aux=np.asarray(out.aux, np.float64),
+        occupancy=np.asarray(out.occupancy, np.float64),
+        opt_hits=opt,
+        wall_seconds=wall,
+    )
+
+
+# ---------------------------------------------------------------------------
+# carries for the fractional policies (state + traced params + sampling rng)
+# ---------------------------------------------------------------------------
+class OGBCarry(NamedTuple):
+    """OGB_cl state with its per-combo parameters as traced leaves."""
+
+    f: jax.Array  # (N,) float32 fractional state
+    tau: jax.Array  # () float32 previous chunk's projection threshold
+    eta: jax.Array  # () float32 learning rate
+    cap: jax.Array  # () float32 capacity
+    p: jax.Array  # (N,) permanent random numbers (poisson) or (0,)
+    u_key: jax.Array  # (2,) uint32 key data for per-chunk Madow offsets
+    t: jax.Array  # () int32 chunk counter
+
+
+class OMDApiCarry(NamedTuple):
+    """OMD log-weight state with its per-combo parameters as traced leaves."""
+
+    f: jax.Array  # (N,) float32 fractional state
+    w: jax.Array  # (N,) float32 log-weights (renormalized every chunk)
+    lam: jax.Array  # () float32 last KL-projection threshold
+    eta: jax.Array  # () float32
+    cap: jax.Array  # () float32
+    p: jax.Array  # (N,) or (0,)
+    u_key: jax.Array  # (2,) uint32
+    t: jax.Array  # () int32
+
+
+def _sampling_init(seed: int, catalog_size: int, sample: str):
+    """(p, u_key): the shared seed derivation
+    (:func:`repro.cachesim.replay.sampling_keys`), with the Madow key as
+    raw key data so it stacks/donates like any other carry leaf."""
+    p, k_u = sampling_keys(seed, catalog_size, sample)
+    return p, jax.random.key_data(k_u)
+
+
+def _chunk_u(sample: str, u_key: jax.Array, t: jax.Array) -> jax.Array:
+    """Per-chunk Madow offset, derived from the carried key + chunk counter
+    (counter-mode so streamed/resumed runs draw the same sequence)."""
+    if sample != "madow":
+        return jnp.zeros((), jnp.float32)
+    k = jax.random.fold_in(jax.random.wrap_key_data(u_key), t)
+    return jax.random.uniform(k, (), jnp.float32)
+
+
+_EMPTY_COUNTS = None  # lazily-created (0,) placeholder for untracked OPT
+
+
+def _empty_counts():
+    global _EMPTY_COUNTS
+    if _EMPTY_COUNTS is None:
+        _EMPTY_COUNTS = jnp.zeros((0,), jnp.float32)
+    return _EMPTY_COUNTS
+
+
+# ---------------------------------------------------------------------------
+# policy registrations
+# ---------------------------------------------------------------------------
+def _ogb_def(
+    sample: str = "poisson",
+    projection: str = "warm",
+    sweeps: int = DEFAULT_WARM_SWEEPS,
+    iters: int = DEFAULT_BISECT_ITERS,
+    madow_capacity: Optional[int] = None,
+) -> PolicyDef:
+    raw = _make_ogb_step(
+        sample, projection, sweeps, iters, track_opt=False,
+        madow_capacity=madow_capacity,
+    )
+
+    def init(catalog_size, capacity, *, seed=0, eta=None, horizon=None,
+             n_slots=None):
+        if eta is None:
+            raise ValueError("ogb init needs eta (run() resolves eta=None)")
+        if sample == "madow" and int(madow_capacity) != int(capacity):
+            raise ValueError(
+                f"madow needs a static capacity: policy_def('ogb', "
+                f"sample='madow', madow_capacity={capacity}) "
+                f"(got {madow_capacity})"
+            )
+        p, u_key = _sampling_init(seed, catalog_size, sample)
+        return OGBCarry(
+            f=jnp.full(catalog_size, capacity / catalog_size, jnp.float32),
+            tau=jnp.zeros((), jnp.float32),
+            eta=jnp.float32(eta),
+            cap=jnp.float32(capacity),
+            p=p,
+            u_key=u_key,
+            t=jnp.zeros((), jnp.int32),
+        )
+
+    def step(carry, ids):
+        u = _chunk_u(sample, carry.u_key, carry.t)
+        state = (carry.f, carry.tau, _empty_counts())
+        (f, tau, _), (reward, hits, tau_o, occ) = raw(
+            carry.eta, carry.p, carry.cap, state, (ids, u)
+        )
+        carry = carry._replace(f=f, tau=tau, t=carry.t + 1)
+        return carry, StepOut(reward, hits, tau_o, occ)
+
+    return PolicyDef(
+        kind="ogb",
+        name="OGB",
+        init=init,
+        step=step,
+        fractional=True,
+        # Theorem 3.1 tuning at B=1, matching the legacy replay default
+        default_eta=lambda N, C, T, W: theoretical_eta(C, N, T, 1),
+    )
+
+
+def _omd_def(
+    sample: str = "poisson",
+    sweeps: int = _engines.DEFAULT_OMD_SWEEPS,
+    madow_capacity: Optional[int] = None,
+) -> PolicyDef:
+    raw = _engines._make_omd_step(
+        sample, sweeps, track_opt=False, madow_capacity=madow_capacity
+    )
+
+    def init(catalog_size, capacity, *, seed=0, eta=None, horizon=None,
+             n_slots=None):
+        if eta is None:
+            raise ValueError("omd init needs eta (run() resolves eta=None)")
+        if sample == "madow" and int(madow_capacity) != int(capacity):
+            raise ValueError(
+                f"madow needs a static capacity: policy_def('omd', "
+                f"sample='madow', madow_capacity={capacity}) "
+                f"(got {madow_capacity})"
+            )
+        p, u_key = _sampling_init(seed, catalog_size, sample)
+        f0 = capacity / catalog_size
+        return OMDApiCarry(
+            f=jnp.full(catalog_size, f0, jnp.float32),
+            w=jnp.full(catalog_size, float(np.log(f0)), jnp.float32),
+            lam=jnp.zeros((), jnp.float32),
+            eta=jnp.float32(eta),
+            cap=jnp.float32(capacity),
+            p=p,
+            u_key=u_key,
+            t=jnp.zeros((), jnp.int32),
+        )
+
+    def step(carry, ids):
+        u = _chunk_u(sample, carry.u_key, carry.t)
+        state = (carry.f, carry.w, carry.lam, _empty_counts())
+        (f, w, lam, _), (reward, hits, lam_o, occ) = raw(
+            carry.eta, carry.p, carry.cap, state, (ids, u)
+        )
+        carry = carry._replace(f=f, w=w, lam=lam, t=carry.t + 1)
+        return carry, StepOut(reward, hits, lam_o, occ)
+
+    return PolicyDef(
+        kind="omd",
+        name="OMD",
+        init=init,
+        step=step,
+        fractional=True,
+        # Si Salem et al. tuning at the replay batch size (legacy default)
+        default_eta=lambda N, C, T, W: theoretical_eta_omd(C, N, T, W),
+    )
+
+
+def _automaton_def(kind: str, zeta: Optional[float] = None) -> PolicyDef:
+    raw = _engines._STEPS[kind]
+    def_zeta = zeta
+
+    def init(catalog_size, capacity, *, seed=0, eta=None, horizon=None,
+             n_slots=None, zeta=None):
+        return _engines.init_engine_carry(
+            kind,
+            catalog_size,
+            capacity,
+            n_slots=n_slots,
+            seed=seed,
+            zeta=zeta if zeta is not None else def_zeta,
+            horizon=horizon,
+        )
+
+    def step(carry, ids):
+        carry, hitflags = jax.lax.scan(raw, carry, ids)
+        hits = jnp.sum(hitflags.astype(jnp.int32))
+        return carry, StepOut(
+            hits.astype(jnp.float32),
+            hits,
+            jnp.zeros((), jnp.float32),
+            _engines._occ_slots(carry).astype(jnp.float32),
+        )
+
+    return PolicyDef(kind=kind, name=kind.upper(), init=init, step=step)
+
+
+def _ogb_grad_def(iters: int = DEFAULT_BISECT_ITERS) -> PolicyDef:
+    """OGB on dense gradient vectors — the serving-side flavor.
+
+    ``step(carry, grad)`` takes a raw per-item weight vector (e.g. routed
+    token counts per MoE expert), normalizes it to unit mass, and performs
+    one fractional OGB update.  ``StepOut.reward`` is the weighted resident
+    hit mass (pre-update, under the carried Poisson sample), ``hits`` the
+    number of items swapped *in* this step — the positive-coordination
+    telemetry (:class:`repro.serve.expert_cache.OGBExpertCache` streams this
+    one step at a time via the carry contract)."""
+
+    def init(catalog_size, capacity, *, seed=0, eta=None, horizon=None,
+             n_slots=None):
+        if eta is None:
+            raise ValueError("ogb_grad init needs eta")
+        # legacy expert-cache stream: p drawn straight from key(seed)
+        p = permanent_random_numbers(jax.random.key(seed), catalog_size)
+        return OGBCarry(
+            f=jnp.full(catalog_size, capacity / catalog_size, jnp.float32),
+            tau=jnp.zeros((), jnp.float32),
+            eta=jnp.float32(eta),
+            cap=jnp.float32(capacity),
+            p=p,
+            u_key=jax.random.key_data(jax.random.key(seed)),
+            t=jnp.zeros((), jnp.int32),
+        )
+
+    def step(carry, grad):
+        total = jnp.sum(grad)
+        norm = grad / jnp.maximum(total, 1.0)  # unit-mass per-step gradient
+        resident = carry.f >= carry.p
+        reward = jnp.sum(norm * resident.astype(jnp.float32))
+        y = carry.f + carry.eta * norm
+        f_new, tau = capped_simplex_project(y, carry.cap, iters)
+        resident_new = f_new >= carry.p
+        swapped = jnp.sum(
+            jnp.logical_and(resident_new, ~resident).astype(jnp.int32)
+        )
+        carry = carry._replace(f=f_new, tau=tau, t=carry.t + 1)
+        return carry, StepOut(
+            reward,
+            swapped,
+            tau,
+            jnp.sum(resident_new.astype(jnp.float32)),
+        )
+
+    return PolicyDef(kind="ogb_grad", name="OGB_grad", init=init, step=step,
+                     fractional=True, trace_driven=False)
+
+
+register_policy_def("ogb", _ogb_def)
+register_policy_def("omd", _omd_def)
+register_policy_def("ogb_grad", _ogb_grad_def)
+for _kind in _engines.ENGINE_KINDS:
+    register_policy_def(_kind, functools.partial(_automaton_def, _kind))

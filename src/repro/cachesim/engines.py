@@ -1,4 +1,4 @@
-"""Device-resident baseline policy engines — classic policies as scan automata.
+"""Device-resident baseline policy steps — classic policies as scan automata.
 
 The paper's comparison baselines (LRU / FIFO / LFU, the no-regret FTPL of
 Bhattacharjee et al. and OMD of Si Salem et al.) were host-side per-request
@@ -27,34 +27,26 @@ device-resident treatment:
   log-weight step the threshold provably lies in ``[0, eta * B]``, and a few
   safeguarded Newton sweeps replace a cold bisection.
 
-Every automaton is one ``jax.lax.scan`` over ``(M, W)`` request chunks with a
-donated carry (the :class:`repro.cachesim.replay.ReplayCarry` pattern):
-nothing crosses the host boundary until the final metrics fetch.  The sweep
-layer (:func:`sweep_engine`) stacks carries and ``vmap``s one compiled replay
-over (capacities x seeds) so a whole scenario grid is a single device
-dispatch; the per-request Python policies stay available as the slow
-differential-testing oracle.
+This module owns the raw per-request/per-chunk step functions and carries;
+the execution layer lives in :mod:`repro.cachesim.api`, where every kind is
+registered as a :class:`~repro.cachesim.api.PolicyDef` and replayed/swept by
+the one generic engine.  The legacy entry points here (``run_engine`` /
+``run_omd`` / ``sweep_engine``) are deprecated thin wrappers over that API.
 """
 
 from __future__ import annotations
 
 import functools
-import time
-from dataclasses import dataclass, field
-from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+import warnings
+from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.cachesim.replay import (
-    ReplayMetrics,
-    find_combo,
-    opt_hits_by_combo,
-    sample_chunk_metrics,
-    sampling_arrays,
-)
+from repro.cachesim.replay import sample_chunk_metrics
+from repro.cachesim.results import RunResult, SweepResult, find_combo
 from repro.core.ftpl import ftpl_initial_top_c, ftpl_noise, theoretical_zeta
 from repro.core.omd import theoretical_eta_omd
 from repro.jaxcache.fractional import warm_bracket_hi
@@ -65,6 +57,11 @@ _I32_MIN = np.int32(np.iinfo(np.int32).min)
 #: kinds compiled by this module as discrete slot automata
 ENGINE_KINDS = ("lru", "fifo", "lfu", "ftpl")
 DEFAULT_OMD_SWEEPS = 10
+
+#: legacy names — the five result dataclasses are unified in
+#: :mod:`repro.cachesim.results`
+EngineResult = RunResult
+EngineSweepResult = SweepResult
 
 
 # ---------------------------------------------------------------------------
@@ -241,8 +238,8 @@ def make_engine_run(kind: str):
     """Unjitted whole-trace automaton: ``run(carry, chunks) -> (carry, ys)``.
 
     ``chunks`` is (M, W) int32; ``ys`` stacks per-chunk (hits, occupancy).
-    Kept unjitted so :func:`sweep_engine` can ``vmap`` it; callers wanting a
-    single replay should use :func:`make_engine_fn`.
+    Kept unjitted so sweeps can ``vmap`` it; callers wanting a single replay
+    should use :func:`make_engine_fn`.
     """
     step = _STEPS[kind]
 
@@ -263,104 +260,7 @@ def make_engine_fn(kind: str):
 
 
 # ---------------------------------------------------------------------------
-# host-side result view
-# ---------------------------------------------------------------------------
-@dataclass
-class EngineResult:
-    """Host-side view of one automaton replay (single final fetch)."""
-
-    name: str
-    kind: str
-    T: int
-    window: int
-    capacity: int
-    hits: np.ndarray  # (M,) per-chunk integral hits
-    occupancy: np.ndarray  # (M,) per-chunk cached-item count
-    wall_seconds: float = 0.0
-    extras: Dict[str, float] = field(default_factory=dict)
-
-    @property
-    def hit_ratio(self) -> float:
-        return float(self.hits.sum()) / max(self.T, 1)
-
-    @property
-    def us_per_request(self) -> float:
-        return 1e6 * self.wall_seconds / max(self.T, 1)
-
-    def windowed_hit_ratio(self, window: int) -> np.ndarray:
-        per = max(window // self.window, 1)
-        m = (len(self.hits) // per) * per
-        if m == 0:
-            return np.array([self.hit_ratio])
-        return self.hits[:m].reshape(-1, per).sum(axis=1) / (per * self.window)
-
-
-def _as_chunks(trace: np.ndarray, window: int) -> Tuple[jnp.ndarray, int]:
-    m = len(trace) // window
-    if m == 0:
-        raise ValueError(f"trace shorter than one window ({len(trace)} < {window})")
-    t_used = m * window
-    return (
-        jnp.asarray(np.asarray(trace[:t_used]).reshape(m, window), jnp.int32),
-        t_used,
-    )
-
-
-def run_engine(
-    kind: str,
-    trace: np.ndarray,
-    catalog_size: int,
-    capacity: int,
-    *,
-    window: int = 10_000,
-    seed: int = 0,
-    zeta: Optional[float] = None,
-    horizon: Optional[int] = None,
-    name: Optional[str] = None,
-) -> EngineResult:
-    """Replay a whole trace through one scan automaton (AOT-compiled timing).
-
-    A trailing partial window is dropped, matching :func:`replay_trace`.
-    ``horizon`` defaults to the replayed length for FTPL's zeta tuning.
-    """
-    chunks, t_used = _as_chunks(trace, window)
-    if kind == "ftpl" and zeta is None and horizon is None:
-        horizon = t_used
-    carry = init_engine_carry(
-        kind, catalog_size, capacity, seed=seed, zeta=zeta, horizon=horizon
-    )
-    fn = make_engine_fn(kind)
-    compiled = fn.lower(carry, chunks).compile()
-    t0 = time.perf_counter()
-    carry, (hits, occ) = compiled(carry, chunks)
-    jax.block_until_ready((hits, occ))
-    wall = time.perf_counter() - t0
-    return EngineResult(
-        name=name or kind.upper(),
-        kind=kind,
-        T=t_used,
-        window=window,
-        capacity=int(capacity),
-        hits=np.asarray(hits, np.int64),
-        occupancy=np.asarray(occ, np.int64),
-        wall_seconds=wall,
-    )
-
-
-def engine_hit_sequence(
-    kind: str,
-    trace: np.ndarray,
-    catalog_size: int,
-    capacity: int,
-    **kw,
-) -> np.ndarray:
-    """Per-request hit flags (window=1) — the differential-testing probe."""
-    res = run_engine(kind, trace, catalog_size, capacity, window=1, **kw)
-    return res.hits.astype(bool)
-
-
-# ---------------------------------------------------------------------------
-# OMD — mirror-descent fractional engine (multiplicative analogue of replay)
+# OMD — mirror-descent fractional step (multiplicative analogue of replay)
 # ---------------------------------------------------------------------------
 def _omd_project(w, cap, hi, sweeps):
     """Safeguarded-Newton KL threshold: lam with sum min(1, e^(w-lam)) = C.
@@ -395,6 +295,39 @@ def _omd_project(w, cap, hi, sweeps):
     return lam
 
 
+def _make_omd_step(
+    sample: str,
+    sweeps: int,
+    track_opt: bool,
+    madow_capacity: Optional[int] = None,
+):
+    """The per-chunk OMD update, with *traced* eta and capacity — the
+    mirror-descent counterpart of :func:`repro.cachesim.replay._make_ogb_step`
+    (same ``step(eta, p, cap, carry, xs)`` contract)."""
+    if sample not in ("poisson", "madow", "none"):
+        raise ValueError(f"unknown sample mode {sample!r}")
+    if sample == "madow" and madow_capacity is None:
+        raise ValueError("madow sampling needs a static capacity")
+
+    def step(eta, p, cap, carry, xs):
+        f, w, _lam, counts_tot = carry
+        ids, u = xs
+        reward, hits, occ = sample_chunk_metrics(
+            sample, madow_capacity, f, ids, p, u
+        )
+        w = w.at[ids].add(eta)
+        lam = _omd_project(
+            w, cap, warm_bracket_hi(eta * jnp.float32(ids.shape[0])), sweeps
+        )
+        w = w - lam  # renormalize: f = min(1, e^w) stays threshold-free
+        f_new = jnp.minimum(1.0, jnp.exp(w))
+        if track_opt:
+            counts_tot = counts_tot.at[ids].add(1.0)
+        return OMDCarry(f_new, w, lam, counts_tot), (reward, hits, lam, occ)
+
+    return step
+
+
 @functools.lru_cache(maxsize=64)
 def make_omd_fn(
     catalog_size: int,
@@ -408,32 +341,17 @@ def make_omd_fn(
     :func:`repro.cachesim.replay.make_replay_fn`:
     ``replay(carry, chunks, eta, p, us) -> (carry', opt_hits, ys)``.
     """
-    if sample not in ("poisson", "madow", "none"):
-        raise ValueError(f"unknown sample mode {sample!r}")
+    step = _make_omd_step(sample, sweeps, track_opt, madow_capacity=capacity)
     cap_f = float(capacity)
-
-    def step(eta, p, carry, xs):
-        f, w, _lam, counts_tot = carry
-        ids, u = xs
-        reward, hits, occ = sample_chunk_metrics(
-            sample, capacity, f, ids, p, u
-        )
-        w = w.at[ids].add(eta)
-        lam = _omd_project(
-            w, cap_f, warm_bracket_hi(eta * jnp.float32(batch)), sweeps
-        )
-        w = w - lam  # renormalize: f = min(1, e^w) stays threshold-free
-        f_new = jnp.minimum(1.0, jnp.exp(w))
-        if track_opt:
-            counts_tot = counts_tot.at[ids].add(1.0)
-        return OMDCarry(f_new, w, lam, counts_tot), (reward, hits, lam, occ)
 
     def replay(carry, chunks, eta, p, us):
         m = chunks.shape[0]
         if us.shape[0] != m:
             us = jnp.zeros((m,), jnp.float32)
         carry, ys = jax.lax.scan(
-            lambda c, x: step(eta, p, c, x), carry, (chunks, us)
+            lambda c, x: step(eta, p, jnp.float32(cap_f), c, x),
+            carry,
+            (chunks, us),
         )
         if track_opt:
             opt = jnp.sum(jax.lax.top_k(carry.counts, capacity)[0])
@@ -454,6 +372,64 @@ def init_omd_carry(catalog_size: int, capacity: int) -> OMDCarry:
     )
 
 
+# ---------------------------------------------------------------------------
+# deprecated entry points — thin wrappers over the unified policy engine
+# ---------------------------------------------------------------------------
+def run_engine(
+    kind: str,
+    trace: np.ndarray,
+    catalog_size: int,
+    capacity: int,
+    *,
+    window: int = 10_000,
+    seed: int = 0,
+    zeta: Optional[float] = None,
+    horizon: Optional[int] = None,
+    name: Optional[str] = None,
+) -> RunResult:
+    """Replay a whole trace through one scan automaton.
+
+    .. deprecated::
+        Use ``api.run(api.policy_def(kind), trace, N, C, window=...)``
+        (:mod:`repro.cachesim.api`).
+    """
+    warnings.warn(
+        "run_engine is deprecated; use repro.cachesim.api.run("
+        f"policy_def({kind!r}), ...) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.cachesim import api
+
+    return api.run(
+        api.policy_def(kind),
+        trace,
+        catalog_size,
+        capacity,
+        window=window,
+        seed=seed,
+        horizon=horizon,
+        track_opt=False,
+        keep_carry=False,  # legacy EngineResult carried no final state
+        name=name,
+        zeta=zeta,
+    )
+
+
+def engine_hit_sequence(
+    kind: str,
+    trace: np.ndarray,
+    catalog_size: int,
+    capacity: int,
+    **kw,
+) -> np.ndarray:
+    """Per-request hit flags (window=1) — the differential-testing probe."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        res = run_engine(kind, trace, catalog_size, capacity, window=1, **kw)
+    return res.hits.astype(bool)
+
+
 def run_omd(
     trace: np.ndarray,
     catalog_size: int,
@@ -467,71 +443,40 @@ def run_omd(
     track_opt: bool = True,
     keep_final_f: bool = False,
     name: str = "OMD",
-):
+) -> RunResult:
     """Replay a whole trace through the scan-compiled OMD engine.
 
-    Returns a :class:`repro.cachesim.replay.ReplayMetrics` (the taus field
-    holds the per-chunk KL thresholds lambda).
+    .. deprecated::
+        Use ``api.run(api.policy_def("omd", ...), trace, N, C,
+        window=batch)`` (:mod:`repro.cachesim.api`).  Under
+        ``sample="madow"`` the per-chunk offsets are counter-derived from
+        the carried key (see :func:`repro.cachesim.replay.replay_trace`).
     """
-    m = len(trace) // batch
-    if m == 0:
-        raise ValueError(f"trace shorter than one batch ({len(trace)} < {batch})")
-    t_used = m * batch
-    if eta is None:
-        eta = theoretical_eta_omd(capacity, catalog_size, t_used, batch)
-    chunks = jnp.asarray(
-        np.asarray(trace[:t_used]).reshape(m, batch), jnp.int32
+    warnings.warn(
+        "run_omd is deprecated; use repro.cachesim.api.run("
+        "policy_def('omd'), ...) instead",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    p, us = sampling_arrays(seed, catalog_size, m, sample)
-    fn = make_omd_fn(
-        catalog_size, capacity, batch, sample=sample, sweeps=sweeps,
+    from repro.cachesim import api
+
+    opts = dict(sample=sample, sweeps=sweeps)
+    if sample == "madow":
+        opts["madow_capacity"] = int(capacity)
+    res = api.run(
+        api.policy_def("omd", **opts),
+        trace,
+        catalog_size,
+        capacity,
+        window=batch,
+        eta=eta,
+        seed=seed,
         track_opt=track_opt,
-    )
-    carry = init_omd_carry(catalog_size, capacity)
-    t0 = time.perf_counter()
-    carry, opt, (reward, hits, lams, occ) = fn(
-        carry, chunks, jnp.float32(eta), p, us
-    )
-    jax.block_until_ready((carry.f, opt, reward, hits, lams, occ))
-    wall = time.perf_counter() - t0
-    return ReplayMetrics(
+        keep_carry=keep_final_f,  # legacy footprint: final state is opt-in
         name=name,
-        T=t_used,
-        batch=batch,
-        capacity=capacity,
-        frac_reward=np.asarray(reward, np.float64),
-        hits=np.asarray(hits, np.int64),
-        taus=np.asarray(lams, np.float64),
-        occupancy=np.asarray(occ, np.float64),
-        opt_hits=float(opt),
-        final_f=np.asarray(carry.f) if keep_final_f else None,
-        wall_seconds=wall,
-        extras={"eta": float(eta), "sweeps": float(sweeps)},
     )
-
-
-# ---------------------------------------------------------------------------
-# vmapped sweeps: one device dispatch over (capacities x seeds)
-# ---------------------------------------------------------------------------
-@dataclass
-class EngineSweepResult:
-    """Stacked results of one vmapped automaton sweep."""
-
-    kind: str
-    combos: List[Dict[str, float]]  # [{"capacity": C, "seed": s}, ...]
-    T: int
-    window: int
-    hits: np.ndarray  # (R, M)
-    occupancy: np.ndarray  # (R, M)
-    opt_hits: np.ndarray  # (R,) hindsight static-OPT per combo (host-side)
-    wall_seconds: float = 0.0
-
-    @property
-    def hit_ratios(self) -> np.ndarray:
-        return self.hits.sum(axis=1) / max(self.T, 1)
-
-    def row(self, **match) -> int:
-        return find_combo(self.combos, **match)
+    res.extras["sweeps"] = float(sweeps)
+    return res
 
 
 def sweep_engine(
@@ -545,51 +490,29 @@ def sweep_engine(
     zeta: Optional[float] = None,
     horizon: Optional[int] = None,
     track_opt: bool = True,
-) -> EngineSweepResult:
+) -> SweepResult:
     """Run one automaton over a (capacity x seed) grid in a single dispatch.
 
-    Carries are padded to ``max(capacities)`` slots and stacked; the compiled
-    replay is ``vmap``-ed over the stack with the trace broadcast.  Seeds only
-    affect FTPL (the noise draw) but are accepted uniformly so callers can
-    sweep any engine with one call.  OPT is computed host-side per capacity
-    (it depends only on the trace histogram).
+    .. deprecated::
+        Use ``api.sweep(api.policy_def(kind), trace, N, capacities, ...)``
+        (:mod:`repro.cachesim.api`).
     """
-    chunks, t_used = _as_chunks(trace, window)
-    if kind == "ftpl" and zeta is None and horizon is None:
-        horizon = t_used
-    n_slots = int(max(capacities))
-    combos = [
-        {"capacity": int(C), "seed": int(s)} for C in capacities for s in seeds
-    ]
-    carries = [
-        init_engine_carry(
-            kind, catalog_size, combo["capacity"], n_slots=n_slots,
-            seed=combo["seed"], zeta=zeta, horizon=horizon,
-        )
-        for combo in combos
-    ]
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *carries)
-    vrun = jax.jit(
-        jax.vmap(make_engine_run(kind), in_axes=(0, None)),
-        donate_argnums=(0,),
+    warnings.warn(
+        "sweep_engine is deprecated; use repro.cachesim.api.sweep("
+        f"policy_def({kind!r}), ...) instead",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    compiled = vrun.lower(stacked, chunks).compile()
-    t0 = time.perf_counter()
-    _carry, (hits, occ) = compiled(stacked, chunks)
-    jax.block_until_ready((hits, occ))
-    wall = time.perf_counter() - t0
-    opt = (
-        opt_hits_by_combo(np.asarray(trace[:t_used]), combos)
-        if track_opt
-        else np.zeros(len(combos))
-    )
-    return EngineSweepResult(
-        kind=kind,
-        combos=combos,
-        T=t_used,
+    from repro.cachesim import api
+
+    return api.sweep(
+        api.policy_def(kind),
+        trace,
+        catalog_size,
+        capacities,
+        seeds=seeds,
         window=window,
-        hits=np.asarray(hits, np.int64),
-        occupancy=np.asarray(occ, np.int64),
-        opt_hits=opt,
-        wall_seconds=wall,
+        horizon=horizon,
+        track_opt=track_opt,
+        zeta=zeta,
     )

@@ -4,30 +4,27 @@ The per-batch driver (``for batch: ogb_batch_update(...)``) pays a Python
 dispatch + host round-trip per batch and a cold ~50-sweep bisection per
 projection — at paper scale (millions of requests over million-item catalogs)
 the harness reintroduces exactly the per-step overhead the paper's O(log N)
-policy removes.  This engine compiles the *entire* replay into a single
-``jax.lax.scan`` over ``(num_chunks, B)`` request chunks with a donated
-carry, accumulating on device:
-
-* fractional reward  sum_t f[r_t] (pre-update, OCO order),
-* integral hits under coordinated Poisson or Madow sampling,
-* per-chunk occupancy and projection threshold tau,
-* the whole-trace request histogram, from which the hindsight-OPT reward
-  (top-C counts) and hence regret are computed — still on device.
-
-Nothing crosses the host boundary until the final metrics fetch.
+policy removes.  This module owns the *raw* OGB_cl scan step (gradient
+scatter-add + warm-started capped-simplex projection) and the low-level
+whole-trace ``make_replay_fn`` builder used by the throughput benchmark.
 
 The projection is *warm-started*: with a feasible pre-step state the per-chunk
 threshold provably lies in [0, eta * B], and the previous chunk's tau seeds a
 bracketed-Newton root-find (:func:`repro.jaxcache.fractional.
 capped_simplex_project_warm`) that needs single-digit catalog sweeps instead
 of ~50 cold bisection sweeps.
+
+The public entry points (``replay_trace`` / ``sweep_replay``) are deprecated
+thin wrappers over the unified policy engine — use
+:func:`repro.cachesim.api.run` / :func:`repro.cachesim.api.sweep` with
+``policy_def("ogb")`` instead; the OGB policy is registered there through the
+same step built here, so the replayed dynamics are identical.
 """
 
 from __future__ import annotations
 
 import functools
-import time
-from dataclasses import dataclass, field
+import warnings
 from typing import Dict, List, NamedTuple, Optional, Sequence
 
 import numpy as np
@@ -35,6 +32,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.cachesim.results import (
+    RunResult,
+    SweepResult,
+    find_combo,
+)
 from repro.jaxcache.fractional import (
     DEFAULT_BISECT_ITERS,
     DEFAULT_WARM_SWEEPS,
@@ -45,20 +47,34 @@ from repro.jaxcache.fractional import (
     warm_bracket_hi,
 )
 
+#: legacy names — the five result dataclasses are unified in
+#: :mod:`repro.cachesim.results`
+ReplayMetrics = RunResult
+ReplaySweepResult = SweepResult
 
-def sampling_arrays(
-    seed: int, catalog_size: int, m: int, sample: str
-) -> tuple:
-    """Seed-derived (p, us): permanent random numbers for Poisson sampling
-    and per-chunk Madow offsets.  The one derivation every replay flavor
-    (OGB scan, OMD engine, vmapped sweeps) shares — size-0 placeholders for
-    the unused mode."""
+
+def sampling_keys(seed: int, catalog_size: int, sample: str) -> tuple:
+    """Seed-derived ``(p, k_u)``: the permanent random numbers for Poisson
+    sampling (size-0 when unused) and the key that drives Madow offsets.
+    THE one seed derivation — both the unified api carries and the legacy
+    per-trace arrays build on it, so the Poisson stream cannot desync
+    between the two paths (the goldens pin it)."""
     k_p, k_u = jax.random.split(jax.random.key(seed))
     p = (
         permanent_random_numbers(k_p, catalog_size)
         if sample == "poisson"
         else jnp.zeros((0,), jnp.float32)
     )
+    return p, k_u
+
+
+def sampling_arrays(
+    seed: int, catalog_size: int, m: int, sample: str
+) -> tuple:
+    """Seed-derived (p, us): permanent random numbers for Poisson sampling
+    and a per-chunk Madow offset vector (size-0 placeholders for the unused
+    mode) — the legacy vector form consumed by :func:`make_replay_fn`."""
+    p, k_u = sampling_keys(seed, catalog_size, sample)
     us = (
         jax.random.uniform(k_u, (m,), jnp.float32)
         if sample == "madow"
@@ -87,14 +103,6 @@ def sample_chunk_metrics(sample: str, capacity, f, ids, p, u):
         hits = jnp.zeros((), jnp.int32)
         occ = jnp.sum(f)
     return reward, hits, occ
-
-
-def find_combo(combos: "List[Dict[str, float]]", **match) -> int:
-    """Row index of the sweep combo matching all given key/values."""
-    for r, combo in enumerate(combos):
-        if all(combo.get(k) == v for k, v in match.items()):
-            return r
-    raise KeyError(f"no combo matching {match}")
 
 
 def opt_hits_by_combo(
@@ -128,7 +136,6 @@ class ReplayCarry(NamedTuple):
 
 
 def _make_ogb_step(
-    batch: int,
     sample: str,
     projection: str,
     sweeps: int,
@@ -136,12 +143,13 @@ def _make_ogb_step(
     track_opt: bool,
     madow_capacity: Optional[int] = None,
 ):
-    """The per-chunk OGB_cl update, with a *traced* capacity.
+    """The per-chunk OGB_cl update, with *traced* eta and capacity.
 
     Shared by :func:`make_replay_fn` (capacity baked in as a constant) and
-    :func:`sweep_replay` (capacity vmapped over a grid).  ``madow_capacity``
-    must be the static C when ``sample == "madow"`` (Madow needs a static
-    sample count); the other modes treat capacity as data.
+    the unified policy engine (:mod:`repro.cachesim.api`, capacity vmapped
+    over a grid).  The chunk size B is read off ``ids.shape`` (static under
+    scan); ``madow_capacity`` must be the static C when ``sample == "madow"``
+    (Madow needs a static sample count).
     """
     if sample not in ("poisson", "madow", "none"):
         raise ValueError(f"unknown sample mode {sample!r}")
@@ -160,7 +168,7 @@ def _make_ogb_step(
         # avoids materializing a dense (N,) counts histogram per chunk
         y = f.at[ids].add(eta)
         if projection == "warm":
-            hi = warm_bracket_hi(eta * jnp.float32(batch))
+            hi = warm_bracket_hi(eta * jnp.float32(ids.shape[0]))
             f_new, tau = capped_simplex_project_warm(
                 y, cap, jnp.float32(0.0), hi, tau_prev, sweeps
             )
@@ -195,13 +203,13 @@ def make_replay_fn(
     the unused one) and ``ys`` stacks per-chunk (reward, hits, tau,
     occupancy).  The carry is donated: call with a fresh ``ReplayCarry``.
 
-    Memoized on its (hashable) configuration so repeat calls — e.g.
-    ``replay_trace`` in a sweep — reuse the same jitted function and hence
-    XLA's compilation cache instead of re-tracing every time.
+    Memoized on its (hashable) configuration so repeat calls — e.g. the
+    throughput benchmark's repeated timings — reuse the same jitted function
+    and hence XLA's compilation cache instead of re-tracing every time.
     """
     cap_f = float(capacity)
     step = _make_ogb_step(
-        batch, sample, projection, sweeps, iters, track_opt,
+        sample, projection, sweeps, iters, track_opt,
         madow_capacity=capacity,
     )
 
@@ -223,62 +231,6 @@ def make_replay_fn(
     return jax.jit(replay, donate_argnums=(0,))
 
 
-@dataclass
-class ReplayMetrics:
-    """Host-side view of one replay (everything fetched in a single sync)."""
-
-    name: str
-    T: int  # requests actually replayed (num_chunks * batch)
-    batch: int
-    capacity: int
-    frac_reward: np.ndarray  # (M,) per-chunk fractional reward
-    hits: np.ndarray  # (M,) per-chunk integral hits
-    taus: np.ndarray  # (M,) per-chunk projection threshold
-    occupancy: np.ndarray  # (M,) per-chunk sampled-cache size
-    opt_hits: float  # hindsight static-OPT reward over the replayed prefix
-    final_f: Optional[np.ndarray] = None
-    wall_seconds: float = 0.0
-    extras: Dict[str, float] = field(default_factory=dict)
-
-    @property
-    def hit_ratio(self) -> float:
-        return float(self.hits.sum()) / max(self.T, 1)
-
-    @property
-    def frac_hit_ratio(self) -> float:
-        return float(self.frac_reward.sum()) / max(self.T, 1)
-
-    @property
-    def regret(self) -> float:
-        """Hindsight regret of the fractional (OCO) reward."""
-        return self.opt_hits - float(self.frac_reward.sum())
-
-    @property
-    def integral_regret(self) -> float:
-        return self.opt_hits - float(self.hits.sum())
-
-    @property
-    def us_per_request(self) -> float:
-        return 1e6 * self.wall_seconds / max(self.T, 1)
-
-    def windowed_hit_ratio(self, window: int) -> np.ndarray:
-        """Hit ratio per non-overlapping window (rounded to whole chunks)."""
-        per = max(window // self.batch, 1)
-        m = (len(self.hits) // per) * per
-        if m == 0:
-            return np.array([self.hit_ratio])
-        return self.hits[:m].reshape(-1, per).sum(axis=1) / (per * self.batch)
-
-    def windowed_frac_ratio(self, window: int) -> np.ndarray:
-        per = max(window // self.batch, 1)
-        m = (len(self.frac_reward) // per) * per
-        if m == 0:
-            return np.array([self.frac_hit_ratio])
-        return self.frac_reward[:m].reshape(-1, per).sum(axis=1) / (
-            per * self.batch
-        )
-
-
 def replay_trace(
     trace: np.ndarray,
     catalog_size: int,
@@ -293,92 +245,43 @@ def replay_trace(
     track_opt: bool = True,
     keep_final_f: bool = False,
     name: str = "OGB_scan",
-) -> ReplayMetrics:
+) -> RunResult:
     """Replay a whole trace through the scan-compiled OGB_cl engine.
 
-    The trace is reshaped into ``(T // batch, batch)`` chunks (a trailing
-    partial chunk is dropped, matching the per-batch driver).  ``eta`` defaults
-    to the Theorem 3.1 tuning for the replayed horizon.
+    .. deprecated::
+        Use ``api.run(api.policy_def("ogb", ...), trace, N, C, window=batch)``
+        (:mod:`repro.cachesim.api`).  This wrapper forwards there and keeps
+        the legacy signature/result shape.  Poisson and fractional replays
+        are numerically identical to the pre-unification engine; under
+        ``sample="madow"`` the per-chunk offsets are now counter-derived
+        from the carried key (the streaming-resume requirement), so madow
+        hit *samples* come from a different — equally valid — random stream.
     """
-    from repro.core.ogb import theoretical_eta  # cheap, avoids a cycle at import
-
-    n_chunks = len(trace) // batch
-    if n_chunks == 0:
-        raise ValueError(f"trace shorter than one batch ({len(trace)} < {batch})")
-    t_used = n_chunks * batch
-    if eta is None:
-        eta = theoretical_eta(capacity, catalog_size, t_used, 1)
-    chunks = jnp.asarray(
-        np.asarray(trace[:t_used]).reshape(n_chunks, batch), jnp.int32
+    warnings.warn(
+        "replay_trace is deprecated; use repro.cachesim.api.run("
+        "policy_def('ogb'), ...) instead",
+        DeprecationWarning,
+        stacklevel=2,
     )
+    from repro.cachesim import api
 
-    p, us = sampling_arrays(seed, catalog_size, n_chunks, sample)
-
-    fn = make_replay_fn(
+    opts = dict(sample=sample, projection=projection, sweeps=sweeps, iters=iters)
+    if sample == "madow":
+        opts["madow_capacity"] = int(capacity)
+    res = api.run(
+        api.policy_def("ogb", **opts),
+        trace,
         catalog_size,
         capacity,
-        batch,
-        sample=sample,
-        projection=projection,
-        sweeps=sweeps,
-        iters=iters,
+        window=batch,
+        eta=eta,
+        seed=seed,
         track_opt=track_opt,
-    )
-    carry = ReplayCarry.create(catalog_size, capacity)
-    t0 = time.perf_counter()
-    carry, opt, (reward, hits, taus, occ) = fn(
-        carry, chunks, jnp.float32(eta), p, us
-    )
-    jax.block_until_ready((carry.f, opt, reward, hits, taus, occ))
-    wall = time.perf_counter() - t0
-
-    return ReplayMetrics(
+        keep_carry=keep_final_f,  # legacy footprint: final state is opt-in
         name=name,
-        T=t_used,
-        batch=batch,
-        capacity=capacity,
-        frac_reward=np.asarray(reward, np.float64),
-        hits=np.asarray(hits, np.int64),
-        taus=np.asarray(taus, np.float64),
-        occupancy=np.asarray(occ, np.float64),
-        opt_hits=float(opt),
-        final_f=np.asarray(carry.f) if keep_final_f else None,
-        wall_seconds=wall,
-        extras={"eta": float(eta), "sweeps": float(sweeps)},
     )
-
-
-# ---------------------------------------------------------------------------
-# vmapped scenario sweeps: (seeds x etas x capacities) in one device dispatch
-# ---------------------------------------------------------------------------
-@dataclass
-class ReplaySweepResult:
-    """Stacked OGB replays over a parameter grid (single final fetch)."""
-
-    combos: List[Dict[str, float]]  # [{"capacity", "eta", "seed"}, ...]
-    T: int
-    batch: int
-    frac_reward: np.ndarray  # (R, M)
-    hits: np.ndarray  # (R, M)
-    taus: np.ndarray  # (R, M)
-    occupancy: np.ndarray  # (R, M)
-    opt_hits: np.ndarray  # (R,) hindsight static-OPT per combo (host-side)
-    wall_seconds: float = 0.0
-
-    @property
-    def hit_ratios(self) -> np.ndarray:
-        return self.hits.sum(axis=1) / max(self.T, 1)
-
-    @property
-    def frac_hit_ratios(self) -> np.ndarray:
-        return self.frac_reward.sum(axis=1) / max(self.T, 1)
-
-    @property
-    def regrets(self) -> np.ndarray:
-        return self.opt_hits - self.frac_reward.sum(axis=1)
-
-    def row(self, **match) -> int:
-        return find_combo(self.combos, **match)
+    res.extras["sweeps"] = float(sweeps)
+    return res
 
 
 def sweep_replay(
@@ -393,97 +296,36 @@ def sweep_replay(
     sweeps: int = DEFAULT_WARM_SWEEPS,
     iters: int = DEFAULT_BISECT_ITERS,
     track_opt: bool = True,
-) -> ReplaySweepResult:
+) -> SweepResult:
     """Run the whole (seeds x etas x capacities) OGB grid in one dispatch.
 
-    Stacks one :class:`ReplayCarry` per combo and ``vmap``s the scan replay
-    over the stack with the trace broadcast — the entire grid costs one
-    compile + one device round-trip.  ``eta=None`` entries resolve to the
-    Theorem 3.1 tuning for that combo's capacity.  OPT is computed host-side
-    per capacity (it only depends on the trace histogram), so the device
-    carries no per-combo count arrays beyond the shared replay state.
+    .. deprecated::
+        Use ``api.sweep(api.policy_def("ogb", ...), trace, N, capacities,
+        etas=..., seeds=..., window=batch)`` (:mod:`repro.cachesim.api`).
     """
-    from repro.core.ogb import theoretical_eta
+    warnings.warn(
+        "sweep_replay is deprecated; use repro.cachesim.api.sweep("
+        "policy_def('ogb'), ...) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.cachesim import api
 
-    m = len(trace) // batch
-    if m == 0:
-        raise ValueError(f"trace shorter than one batch ({len(trace)} < {batch})")
-    t_used = m * batch
-    chunks = jnp.asarray(
-        np.asarray(trace[:t_used]).reshape(m, batch), jnp.int32
-    )
-    combos = [
-        {
-            "capacity": int(C),
-            # eta=None resolves exactly like replay_trace's default (B=1
-            # Theorem 3.1 tuning) so default-tuned sweep rows reproduce
-            # default-tuned single replays
-            "eta": float(
-                eta
-                if eta is not None
-                else theoretical_eta(int(C), catalog_size, t_used, 1)
-            ),
-            "seed": int(s),
-        }
-        for s in seeds
-        for eta in etas
-        for C in capacities
-    ]
-    carry = jax.tree.map(
-        lambda *xs: jnp.stack(xs),
-        *[ReplayCarry.create(catalog_size, c["capacity"]) for c in combos],
-    )
-    eta_arr = jnp.asarray([c["eta"] for c in combos], jnp.float32)
-    cap_arr = jnp.asarray([c["capacity"] for c in combos], jnp.float32)
-    per_combo = [
-        sampling_arrays(c["seed"], catalog_size, m, sample) for c in combos
-    ]
-    if sample == "poisson":
-        p = jnp.stack([pc[0] for pc in per_combo])
-    else:
-        p = jnp.zeros((len(combos), 1), jnp.float32)
+    opts = dict(sample=sample, projection=projection, sweeps=sweeps, iters=iters)
     if sample == "madow":
-        us = jnp.stack([pc[1] for pc in per_combo])
-        if len(set(c["capacity"] for c in combos)) > 1:
+        if len(set(int(c) for c in capacities)) > 1:
             raise ValueError(
                 "madow sweeps need a single capacity (static sample count); "
                 "use sample='poisson' for capacity grids"
             )
-        madow_capacity = int(capacities[0])
-    else:
-        us = jnp.zeros((len(combos), m), jnp.float32)
-        madow_capacity = None
-    step = _make_ogb_step(
-        batch, sample, projection, sweeps, iters, track_opt=False,
-        madow_capacity=madow_capacity,
-    )
-
-    def one(carry, eta, cap, p, us):
-        return jax.lax.scan(
-            lambda c, x: step(eta, p, cap, c, x), carry, (chunks, us)
-        )
-
-    vrun = jax.jit(
-        jax.vmap(one, in_axes=(0, 0, 0, 0, 0)), donate_argnums=(0,)
-    )
-    compiled = vrun.lower(carry, eta_arr, cap_arr, p, us).compile()
-    t0 = time.perf_counter()
-    _carry, (reward, hits, taus, occ) = compiled(carry, eta_arr, cap_arr, p, us)
-    jax.block_until_ready((reward, hits, taus, occ))
-    wall = time.perf_counter() - t0
-    opt = (
-        opt_hits_by_combo(np.asarray(trace[:t_used]), combos)
-        if track_opt
-        else np.zeros(len(combos))
-    )
-    return ReplaySweepResult(
-        combos=combos,
-        T=t_used,
-        batch=batch,
-        frac_reward=np.asarray(reward, np.float64),
-        hits=np.asarray(hits, np.int64),
-        taus=np.asarray(taus, np.float64),
-        occupancy=np.asarray(occ, np.float64),
-        opt_hits=opt,
-        wall_seconds=wall,
+        opts["madow_capacity"] = int(capacities[0])
+    return api.sweep(
+        api.policy_def("ogb", **opts),
+        trace,
+        catalog_size,
+        capacities,
+        etas=etas,
+        seeds=seeds,
+        window=batch,
+        track_opt=track_opt,
     )

@@ -1,0 +1,167 @@
+"""Shared result types for the unified run/sweep engine.
+
+One home for the host-side views every execution path returns:
+
+* :class:`RunResult` — one policy replayed over one trace (any kind: the
+  fractional gradient policies and the discrete automata share it).  The
+  legacy names (``ReplayMetrics``, ``EngineResult``) are aliases.
+* :class:`SweepResult` — a stacked (capacities x seeds x etas) grid run in
+  one vmapped dispatch.  Legacy ``ReplaySweepResult`` / ``EngineSweepResult``
+  are aliases.
+* :class:`HitStatsMixin` — the single implementation of ``hit_ratio`` and
+  ``us_per_request``, also mixed into the per-request simulator's
+  :class:`repro.cachesim.simulator.SimResult`.
+
+Field conventions: per-chunk arrays are shaped ``(M,)`` (runs) or ``(R, M)``
+(sweeps, one row per combo); ``reward`` is the fractional pre-update reward
+(equal to ``hits`` for the integral automata), ``aux`` holds the per-chunk
+projection threshold (tau for OGB, lambda for OMD, 0 for automata).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+def find_combo(combos: "List[Dict[str, float]]", **match) -> int:
+    """Row index of the sweep combo matching all given key/values."""
+    for r, combo in enumerate(combos):
+        if all(combo.get(k) == v for k, v in match.items()):
+            return r
+    raise KeyError(f"no combo matching {match}")
+
+
+class HitStatsMixin:
+    """The one implementation of the scalar throughput/quality ratios."""
+
+    @property
+    def hit_ratio(self) -> float:
+        return float(np.sum(self.hits)) / max(self.T, 1)
+
+    @property
+    def us_per_request(self) -> float:
+        return 1e6 * self.wall_seconds / max(self.T, 1)
+
+
+@dataclass
+class RunResult(HitStatsMixin):
+    """Host-side view of one policy replay (single final fetch).
+
+    ``carry`` is the final device carry — pass it back to
+    :func:`repro.cachesim.api.run` to resume the replay on the next trace
+    chunk (the streaming contract; note the carry is *donated* on resume,
+    so hand it off rather than keeping references).
+    """
+
+    name: str
+    kind: str
+    T: int  # requests actually replayed (num_chunks * window)
+    window: int  # requests per chunk (the OGB/OMD update batch B)
+    capacity: int
+    reward: np.ndarray  # (M,) per-chunk fractional reward (== hits if integral)
+    hits: np.ndarray  # (M,) per-chunk integral hits
+    aux: np.ndarray  # (M,) per-chunk projection threshold (tau / lambda)
+    occupancy: np.ndarray  # (M,) per-chunk cached mass / item count
+    opt_hits: float = 0.0  # hindsight static-OPT reward over the replayed prefix
+    carry: Any = None  # final device carry (resumable)
+    wall_seconds: float = 0.0
+    extras: Dict[str, float] = field(default_factory=dict)
+
+    # legacy spellings (ReplayMetrics / EngineResult)
+    @property
+    def batch(self) -> int:
+        return self.window
+
+    @property
+    def frac_reward(self) -> np.ndarray:
+        return self.reward
+
+    @property
+    def taus(self) -> np.ndarray:
+        return self.aux
+
+    @property
+    def final_f(self) -> Optional[np.ndarray]:
+        f = getattr(self.carry, "f", None)
+        return None if f is None else np.asarray(f)
+
+    @property
+    def frac_hit_ratio(self) -> float:
+        return float(self.reward.sum()) / max(self.T, 1)
+
+    @property
+    def regret(self) -> float:
+        """Hindsight regret of the fractional (OCO) reward."""
+        return self.opt_hits - float(self.reward.sum())
+
+    @property
+    def integral_regret(self) -> float:
+        return self.opt_hits - float(self.hits.sum())
+
+    def windowed_hit_ratio(self, window: int) -> np.ndarray:
+        """Hit ratio per non-overlapping window (rounded to whole chunks)."""
+        per = max(window // self.window, 1)
+        m = (len(self.hits) // per) * per
+        if m == 0:
+            return np.array([self.hit_ratio])
+        return self.hits[:m].reshape(-1, per).sum(axis=1) / (per * self.window)
+
+    def windowed_frac_ratio(self, window: int) -> np.ndarray:
+        per = max(window // self.window, 1)
+        m = (len(self.reward) // per) * per
+        if m == 0:
+            return np.array([self.frac_hit_ratio])
+        return self.reward[:m].reshape(-1, per).sum(axis=1) / (
+            per * self.window
+        )
+
+
+@dataclass
+class SweepResult:
+    """Stacked replays over a parameter grid (single vmapped dispatch).
+
+    ``combos[r]`` names row ``r``: always ``capacity`` and ``seed``, plus
+    ``eta`` for the fractional policies; :meth:`row` looks rows up by any
+    subset of those keys.
+    """
+
+    kind: str
+    combos: List[Dict[str, float]]
+    T: int
+    window: int
+    reward: np.ndarray  # (R, M)
+    hits: np.ndarray  # (R, M)
+    aux: np.ndarray  # (R, M)
+    occupancy: np.ndarray  # (R, M)
+    opt_hits: np.ndarray  # (R,) hindsight static-OPT per combo (host-side)
+    wall_seconds: float = 0.0
+
+    @property
+    def batch(self) -> int:
+        return self.window
+
+    @property
+    def frac_reward(self) -> np.ndarray:
+        return self.reward
+
+    @property
+    def taus(self) -> np.ndarray:
+        return self.aux
+
+    @property
+    def hit_ratios(self) -> np.ndarray:
+        return self.hits.sum(axis=1) / max(self.T, 1)
+
+    @property
+    def frac_hit_ratios(self) -> np.ndarray:
+        return self.reward.sum(axis=1) / max(self.T, 1)
+
+    @property
+    def regrets(self) -> np.ndarray:
+        return self.opt_hits - self.reward.sum(axis=1)
+
+    def row(self, **match) -> int:
+        return find_combo(self.combos, **match)

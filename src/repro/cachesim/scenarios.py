@@ -7,17 +7,16 @@ sizes and seeds.  Each scenario carries a ``quick`` shape (minutes on one CPU
 core — CI scale) and a ``full`` shape (the paper's trace sizes, feasible now
 that every baseline runs device-resident).
 
-``run_scenario`` drives the whole policy set through the fast engines:
-
-* ``ogb``  -> :func:`repro.cachesim.replay.replay_trace` (lax.scan + warm
-  projection, Poisson sampling),
-* ``omd``  -> :func:`repro.cachesim.engines.run_omd` (mirror-descent scan),
-* ``lru/fifo/lfu/ftpl`` -> :func:`repro.cachesim.engines.run_engine`
-  (slot automata),
-* anything else (``arc``, ``gds``, ...) -> the host-side
-  :func:`repro.core.policies.make_policy` policy driven by
-  :func:`repro.cachesim.simulator.simulate` — the slow exact oracle, included
-  automatically only when the trace is short enough (``HOST_POLICY_MAX_T``).
+``run_scenario`` drives the whole policy set through the one generic
+execution layer (:mod:`repro.cachesim.api`): every registered kind —
+``ogb``/``omd`` (fractional, replayed at the scenario batch size) and
+``lru``/``fifo``/``lfu``/``ftpl`` (slot automata, replayed at the metric
+window) — is a :class:`~repro.cachesim.api.PolicyDef` run by
+:func:`repro.cachesim.api.run`.  Anything unregistered (``arc``, ``gds``,
+...) falls back to the host-side :func:`repro.core.policies.make_policy`
+policy driven by :func:`repro.cachesim.simulator.simulate` — the slow exact
+oracle, included automatically only when the trace is short enough
+(``HOST_POLICY_MAX_T``).
 """
 
 from __future__ import annotations
@@ -27,7 +26,7 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.cachesim import engines
+from repro.cachesim import api
 from repro.cachesim.traces import make_trace
 from repro.core.regret import best_static_hits
 
@@ -229,7 +228,6 @@ def run_scenario(
     caller computes OPT itself (it is an O(T) pass over the trace).
     """
     from repro.cachesim.simulator import simulate
-    from repro.cachesim.replay import replay_trace
     from repro.core.policies import make_policy
 
     sc = get_scenario(name)
@@ -245,31 +243,40 @@ def run_scenario(
         scenario=name, scale=scale, N=n, T=t, C=c, window=w
     )
     skipped = []
+    # hindsight OPT over the batch-aligned prefix, shared by the fractional
+    # regret rows and the OPT(static) row (one O(T) pass, not one per row)
+    t_opt = (len(trace) // batch) * batch if sc.policies else len(trace)
+    opt_hits: Optional[float] = None
+
+    def _opt() -> float:
+        nonlocal opt_hits
+        if opt_hits is None:
+            opt_hits = float(best_static_hits(np.asarray(trace[:t_opt]), c))
+        return opt_hits
+
+    def _engine_def(kind):
+        if kind not in api.policy_def_kinds():
+            return None
+        pd = api.policy_def(kind)
+        return pd if pd.trace_driven else None
+
     for kind in policies if policies is not None else sc.policies:
-        if kind == "ogb":
-            m = replay_trace(
-                trace, n, c, batch=batch, sample="poisson", seed=seed,
-                name="OGB",
+        pd = _engine_def(kind)
+        if pd is not None and pd.fractional:
+            m = api.run(
+                pd, trace, n, c, window=batch, seed=seed, track_opt=False,
+                keep_carry=False,
             )
-            res.rows["OGB"] = {
+            res.rows[m.name] = {
                 "hit_ratio": m.hit_ratio,
                 "frac_hit_ratio": m.frac_hit_ratio,
-                "regret": m.regret,
+                "regret": _opt() - float(m.reward.sum()),
                 "us_per_request": m.us_per_request,
             }
-        elif kind == "omd":
-            m = engines.run_omd(
-                trace, n, c, batch, sample="poisson", seed=seed, name="OMD"
-            )
-            res.rows["OMD"] = {
-                "hit_ratio": m.hit_ratio,
-                "frac_hit_ratio": m.frac_hit_ratio,
-                "regret": m.regret,
-                "us_per_request": m.us_per_request,
-            }
-        elif kind in engines.ENGINE_KINDS:
-            r = engines.run_engine(
-                kind, trace, n, c, window=w, seed=seed, horizon=t
+        elif pd is not None:
+            r = api.run(
+                pd, trace, n, c, window=w, seed=seed, horizon=t,
+                track_opt=False, keep_carry=False,
             )
             res.rows[r.name] = {
                 "hit_ratio": r.hit_ratio,
@@ -286,10 +293,8 @@ def run_scenario(
                 "us_per_request": sr.us_per_request,
             }
     if include_opt:
-        t_opt = (len(trace) // batch) * batch if sc.policies else len(trace)
         res.rows["OPT(static)"] = {
-            "hit_ratio": best_static_hits(np.asarray(trace[:t_opt]), c)
-            / max(t_opt, 1)
+            "hit_ratio": _opt() / max(t_opt, 1)
         }
     res.skipped = tuple(skipped)
     return res

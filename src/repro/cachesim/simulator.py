@@ -13,9 +13,14 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.cachesim.results import HitStatsMixin
+
 
 @dataclass
-class SimResult:
+class SimResult(HitStatsMixin):
+    """Host-simulator result — shares the scalar-ratio implementations with
+    the device-engine results (:mod:`repro.cachesim.results`)."""
+
     name: str
     T: int
     hits: int
@@ -25,14 +30,6 @@ class SimResult:
     occupancy: List[float] = field(default_factory=list)
     wall_seconds: float = 0.0
     extras: Dict[str, float] = field(default_factory=dict)
-
-    @property
-    def hit_ratio(self) -> float:
-        return self.hits / max(self.T, 1)
-
-    @property
-    def us_per_request(self) -> float:
-        return 1e6 * self.wall_seconds / max(self.T, 1)
 
 
 def simulate(

@@ -269,6 +269,24 @@ POLICY_REGISTRY = {
 }
 
 
+#: device-engine PolicyDef factories, registered by repro.cachesim.api at
+#: import time (values are ``factory(**static_options) -> PolicyDef``).
+#: Kept next to POLICY_REGISTRY so the host-policy table and the scan-engine
+#: table are one discoverable pair: a kind present in both runs device-
+#: resident with the host policy as its differential-testing oracle.
+ENGINE_DEFS: Dict[str, object] = {}
+
+
+def register_engine_def(kind: str, factory) -> None:
+    """Hook for :func:`repro.cachesim.api.register_policy_def`."""
+    ENGINE_DEFS[kind.lower()] = factory
+
+
+def engine_def_kinds() -> tuple:
+    """Kind strings with a registered device-engine PolicyDef factory."""
+    return tuple(ENGINE_DEFS)
+
+
 def policy_kinds() -> tuple:
     """All registered kind strings (host-side per-request policies)."""
     return tuple(POLICY_REGISTRY)

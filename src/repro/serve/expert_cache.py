@@ -2,13 +2,15 @@
 
 Catalog = (layer, expert) pairs; the router's per-batch expert counts are the
 gradient of the linear reward  sum_t w_t . x  (an expert "hit" = the tokens it
-serves are processed from HBM rather than refetched from host).  The
-fractional state is maintained with the *batched fractional OGB* data-plane
-update (one capped-simplex projection per serving step, vectorized in JAX),
-and residency is the coordinated Poisson sample with permanent random numbers
-— so consecutive steps swap only O(changed mass) experts: exactly the paper's
-positive-coordination property, applied to expert weights instead of CDN
-objects.
+serves are processed from HBM rather than refetched from host).  The policy is
+the registered ``ogb_grad`` :class:`~repro.cachesim.api.PolicyDef` — the
+dense-gradient flavor of the same fractional OGB update the replay engine
+scans — consumed one serving step at a time through the API's streaming-carry
+contract: ``carry, out = step(carry, expert_counts)``.  Residency is the
+coordinated Poisson sample with permanent random numbers (carried in the
+policy state), so consecutive steps swap only O(changed mass) experts —
+exactly the paper's positive-coordination property, applied to expert weights
+instead of CDN objects.
 
 Regret guarantee inherited from Theorem 3.1: total expert-fetch traffic is
 asymptotically no worse than the best *static* expert placement in hindsight,
@@ -19,18 +21,15 @@ serving, where LFU-style placement (= FTPL) goes stale.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.jaxcache.fractional import (
-    capped_simplex_project,
-    permanent_random_numbers,
-    poisson_sample,
-)
+from repro.cachesim.api import policy_def
+from repro.jaxcache.fractional import poisson_sample
 
 
 @dataclass
@@ -44,7 +43,7 @@ class ExpertCacheConfig:
 
 
 class OGBExpertCache:
-    """Vectorized fractional OGB + Poisson sampling over (L*E,) expert slots."""
+    """Streaming ``ogb_grad`` policy + Poisson residency over (L*E,) experts."""
 
     def __init__(self, cfg: ExpertCacheConfig, seed: int = 0):
         self.cfg = cfg
@@ -58,41 +57,37 @@ class OGBExpertCache:
             )
         else:
             self.eta = cfg.eta
-        self.f = jnp.full((n,), self.C / n, jnp.float32)
-        self.p = permanent_random_numbers(jax.random.key(seed), n)
-        self.resident = poisson_sample(self.f, self.p, self.C)
-        self._update = jax.jit(self._update_impl)
+        pd = policy_def("ogb_grad")
+        self.carry = pd.init(n, self.C, seed=seed, eta=self.eta)
+        self._step = jax.jit(pd.step, donate_argnums=(0,))
+        self._resident = poisson_sample(self.carry.f, self.carry.p, self.C)
         self.steps = 0
         self.swapped_in = 0
         self.hits_weighted = 0.0
         self.total_weighted = 0.0
 
-    def _update_impl(self, f, counts, resident, p):
-        total = jnp.sum(counts)
-        norm = counts / jnp.maximum(total, 1.0)  # per-step gradient, unit mass
-        reward = jnp.sum(norm * resident.astype(jnp.float32))
-        y = f + self.eta * norm
-        f_new, _ = capped_simplex_project(y, float(self.C))
-        resident_new = f_new >= p
-        swapped = jnp.sum(
-            jnp.logical_and(resident_new, jnp.logical_not(resident))
-        )
-        return f_new, resident_new, reward, swapped
+    @property
+    def resident(self) -> jax.Array:
+        """Current Poisson residency mask, derived lazily from the carry
+        (the jitted step already accounts swaps/occupancy — no extra per-step
+        device dispatch on the serving hot path)."""
+        if self._resident is None:
+            self._resident = self.carry.f >= self.carry.p
+        return self._resident
 
     def step(self, expert_counts: np.ndarray) -> Dict[str, float]:
         """expert_counts: (L, E) routed-token counts from the router."""
         counts = jnp.asarray(expert_counts, jnp.float32).reshape(-1)
-        self.f, self.resident, reward, swapped = self._update(
-            self.f, counts, self.resident, self.p
-        )
+        self.carry, out = self._step(self.carry, counts)
+        self._resident = None  # recomputed on demand from the new carry
         self.steps += 1
-        self.swapped_in += int(swapped)
-        self.hits_weighted += float(reward)
+        self.swapped_in += int(out.hits)
+        self.hits_weighted += float(out.reward)
         self.total_weighted += 1.0
         return {
-            "resident_hit_ratio": float(reward),
-            "swapped_in": int(swapped),
-            "occupancy": int(jnp.sum(self.resident)),
+            "resident_hit_ratio": float(out.reward),
+            "swapped_in": int(out.hits),
+            "occupancy": int(out.occupancy),
         }
 
     def resident_mask(self) -> np.ndarray:
