@@ -25,6 +25,7 @@ from . import (
     fig9_occupancy,
     fig10_batched,
     fig11_locality,
+    stream_scale,
     throughput,
 )
 
@@ -40,6 +41,7 @@ SUITES = {
     "kernels": kernel_sweeps.main,
     "throughput": throughput.main,
     "engines": engines_throughput.main,
+    "stream": stream_scale.main,
 }
 
 

@@ -1,0 +1,171 @@
+"""Out-of-core streaming replay at scale — the fixed-memory ledger.
+
+The paper's headline regime is millions of requests over a large catalog;
+this suite proves the tracelab path holds it in **fixed memory**: a
+stats-matched synthesized workload (twitter-shaped: zipf base + one-shot
+/ burst overlay) is streamed through :func:`repro.cachesim.tracelab.run_stream`
+for OGB (fractional gradient) and LFU (discrete automaton) at increasing
+T — up to 1e7 requests at full scale — **without ever materializing the
+trace**.  After each run the process high-water RSS is recorded; the
+acceptance assert is that peak RSS is independent of T (the growth from
+the smallest to the largest T stays far below what materializing the
+largest trace would cost).  A us/request budget guards against gross
+throughput regressions on the streaming path.
+
+Writes ``benchmarks/results/stream_scale.json`` and the tracked top-level
+``BENCH_stream.json`` (same pattern as ``BENCH_engines.json``).
+
+Scales (``REPRO_BENCH_SCALE``): ``mini`` (CI smoke, seconds), ``quick``
+(default, ~1 min), ``full`` (T=1e7, a few minutes on one CPU core).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import resource
+
+import numpy as np
+
+import jax
+
+from repro.cachesim.api import policy_def
+from repro.cachesim.tracelab import fit_profile, run_stream, synthesize_chunks
+from repro.cachesim.traces import make_trace
+
+from .common import SCALE, check_finite, csv_row, save_json
+
+BENCH_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_stream.json",
+)
+
+US_PER_REQUEST_BUDGET = {"ogb": 15.0, "lfu": 50.0}
+
+#: one segment shape shared by every (kind, T) run: all CONFIG Ts are
+#: multiples, so each kind compiles exactly one executable during warmup
+#: and the RSS deltas across T measure streaming memory, not compile pools
+SEGMENT_LEN = 50_000
+
+#: per-scale (N, C, [T ascending]) — LFU is O(C) per request, so C sets its
+#: wall clock; the acceptance criterion is defined at full scale (T=1e7)
+CONFIGS = {
+    "mini": (20_000, 1_000, [50_000, 200_000]),
+    "quick": (100_000, 2_000, [200_000, 2_000_000]),
+    "full": (100_000, 2_000, [1_000_000, 10_000_000]),
+}
+
+
+def _rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def main() -> dict:
+    scale_name = SCALE if SCALE in CONFIGS else "quick"
+    n, c, t_list = CONFIGS[scale_name]
+
+    # twitter-shaped profile fitted on a sampled source (the real_like flow)
+    source = make_trace(
+        "bursty", min(n, 20_000), 200_000, seed=17,
+        burst_fraction=0.5, burst_len_mean=8.0, burst_span=60,
+    )
+    profile = fit_profile(source)
+
+    out = {
+        "scale": scale_name,
+        "N": n,
+        "C": c,
+        "backend": jax.default_backend(),
+        "window": {"ogb": 1_000, "lfu": 10_000},
+        "profile": {
+            "oneshot_frac": profile.oneshot_frac,
+            "burst_frac": profile.burst_frac,
+            "drift_phase": profile.drift_phase,
+        },
+        "rows": [],
+    }
+
+    # warmup at the smallest T so compile-time allocations and the device
+    # pool are charged to the baseline, not to the T-scaling deltas
+    for kind in ("ogb", "lfu"):
+        run_stream(
+            policy_def(kind),
+            synthesize_chunks(profile, t_list[0], catalog=n, seed=5),
+            n, c, window=out["window"][kind], horizon=t_list[0],
+            segment_len=SEGMENT_LEN, keep_carry=False,
+        )
+
+    rss_after = {}
+    for t in t_list:  # ascending: ru_maxrss is a monotone high-water mark
+        for kind in ("ogb", "lfu"):
+            chunks = synthesize_chunks(
+                profile, t, catalog=n, seed=5, chunk_size=65_536
+            )
+            res = run_stream(
+                policy_def(kind),
+                chunks,
+                n,
+                c,
+                window=out["window"][kind],
+                horizon=t,
+                segment_len=SEGMENT_LEN,
+                opt_window=max(t // 50, out["window"][kind]),
+                keep_carry=False,
+            )
+            rss_after[(kind, t)] = _rss_mb()
+            row = {
+                "kind": kind,
+                "T": t,
+                "us_per_request": res.us_per_request,
+                "hit_ratio": res.hit_ratio,
+                "dynamic_opt_ratio": res.dynamic_opt_total / res.T,
+                "dynamic_regret": res.dynamic_regret,
+                "segments": res.n_segments,
+                "rss_mb": rss_after[(kind, t)],
+            }
+            out["rows"].append(row)
+            csv_row(
+                f"stream/{kind}/T={t}",
+                res.us_per_request,
+                f"hit={res.hit_ratio:.4f} rss={row['rss_mb']:.0f}MB",
+            )
+
+    # --- fixed-memory acceptance: peak RSS must not scale with T.  The
+    # growth across a >=10x T increase stays far below the cost of
+    # materializing the largest trace (which is what this path replaces).
+    trace_mb = t_list[-1] * 8 / 1e6
+    threshold_mb = max(24.0, 0.5 * trace_mb)
+    deltas = {}
+    for kind in ("ogb", "lfu"):
+        delta = rss_after[(kind, t_list[-1])] - rss_after[(kind, t_list[0])]
+        deltas[kind] = delta
+        print(
+            f"stream/{kind}: peak-RSS delta {delta:.1f}MB over a "
+            f"{t_list[-1] // t_list[0]}x T increase "
+            f"(materialized trace would be {trace_mb:.0f}MB; "
+            f"budget {threshold_mb:.0f}MB)"
+        )
+        assert delta < threshold_mb, (
+            f"{kind}: peak RSS grew {delta:.1f}MB from T={t_list[0]} to "
+            f"T={t_list[-1]} (>{threshold_mb:.0f}MB): the stream is no "
+            "longer fixed-memory"
+        )
+    out["rss_delta_mb"] = deltas
+    out["rss_threshold_mb"] = threshold_mb
+
+    for row in out["rows"]:
+        budget = US_PER_REQUEST_BUDGET[row["kind"]]
+        assert row["us_per_request"] < budget, (
+            row["kind"], row["T"], row["us_per_request"], budget,
+        )
+
+    check_finite(out)
+    save_json("stream_scale", out)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(out, f, indent=2, default=float)
+    print(f"wrote {BENCH_JSON}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

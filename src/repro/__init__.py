@@ -29,7 +29,18 @@ _LAZY = {
     "sweep": "repro.cachesim.api",
     # result views
     "RunResult": "repro.cachesim.results",
+    "StreamResult": "repro.cachesim.results",
     "SweepResult": "repro.cachesim.results",
+    # tracelab: trace-file ingestion + out-of-core streaming replay
+    "CatalogRemap": "repro.cachesim.tracelab",
+    "TraceProfile": "repro.cachesim.tracelab",
+    "fit_profile": "repro.cachesim.tracelab",
+    "load_trace": "repro.cachesim.tracelab",
+    "open_trace": "repro.cachesim.tracelab",
+    "run_stream": "repro.cachesim.tracelab",
+    "synthesize": "repro.cachesim.tracelab",
+    "synthesize_chunks": "repro.cachesim.tracelab",
+    "write_trace": "repro.cachesim.tracelab",
     # host-side policies (the slow exact oracles) + per-request simulator
     "make_policy": "repro.core.policies",
     "policy_kinds": "repro.core.policies",

@@ -8,6 +8,9 @@ One home for the host-side views every execution path returns:
 * :class:`SweepResult` — a stacked (capacities x seeds x etas) grid run in
   one vmapped dispatch.  Legacy ``ReplaySweepResult`` / ``EngineSweepResult``
   are aliases.
+* :class:`StreamResult` — a :class:`RunResult` accumulated out-of-core by
+  :func:`repro.cachesim.tracelab.stream.run_stream`, extended with the
+  windowed time-varying-OPT ("dynamic regret") accounting.
 * :class:`HitStatsMixin` — the single implementation of ``hit_ratio`` and
   ``us_per_request``, also mixed into the per-request simulator's
   :class:`repro.cachesim.simulator.SimResult`.
@@ -117,6 +120,49 @@ class RunResult(HitStatsMixin):
         return self.reward[:m].reshape(-1, per).sum(axis=1) / (
             per * self.window
         )
+
+
+@dataclass
+class StreamResult(RunResult):
+    """A :class:`RunResult` accumulated out-of-core by
+    :func:`repro.cachesim.tracelab.stream.run_stream`.
+
+    Per-chunk arrays are concatenated across stream segments (so every
+    inherited windowed/ratio view works unchanged); on top of them the
+    stream tracks the **time-varying OPT proxy**: ``dyn_opt_hits[k]`` is
+    the hindsight-optimal static allocation recomputed for the ``k``-th
+    ``dyn_opt_window``-request window alone.  Summed, that is the
+    comparator of the *dynamic* regret notion (an adversary allowed to
+    re-pick its cache every window) — a strictly harder bar than the
+    static OPT in ``opt_hits``.
+    """
+
+    dyn_opt_hits: Optional[np.ndarray] = None  # (K,) per-window OPT hits
+    dyn_opt_window: int = 0  # requests per dynamic-OPT window (0 = off)
+    n_segments: int = 0  # device dispatches the stream took
+    t_dropped: int = 0  # trailing requests short of one window, not replayed
+
+    @property
+    def dynamic_opt_total(self) -> float:
+        """Total hits of the per-window re-optimized comparator."""
+        if self.dyn_opt_hits is None:
+            raise ValueError("run_stream(..., opt_window=...) was not set")
+        return float(np.sum(self.dyn_opt_hits))
+
+    @property
+    def dynamic_regret(self) -> float:
+        """Fractional-reward regret vs the time-varying OPT proxy, over the
+        prefix the dynamic windows cover."""
+        total = self.dynamic_opt_total  # raises cleanly when not tracked
+        covered = len(self.dyn_opt_hits) * self.dyn_opt_window
+        chunks = covered // max(self.window, 1)
+        return total - float(self.reward[:chunks].sum())
+
+    def dyn_opt_ratio(self) -> np.ndarray:
+        """Per-window hit ratio of the time-varying OPT proxy."""
+        if self.dyn_opt_hits is None:
+            raise ValueError("run_stream(..., opt_window=...) was not set")
+        return self.dyn_opt_hits / max(self.dyn_opt_window, 1)
 
 
 @dataclass

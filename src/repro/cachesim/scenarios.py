@@ -1,7 +1,10 @@
 """Named experiment scenarios: trace family x (N, T, C) x policy set.
 
-One registry maps the five synthetic trace families of
-:mod:`repro.cachesim.traces` to the paper figures they reproduce, so every
+One registry maps the synthetic trace families of
+:mod:`repro.cachesim.traces` — the five generator-calibrated families plus
+the ``real_like`` stats-matched synthesizer family
+(:mod:`repro.cachesim.tracelab.synth`) — to the paper figures they
+reproduce, so every
 benchmark, test and golden fixture names a scenario instead of re-stating
 sizes and seeds.  Each scenario carries a ``quick`` shape (minutes on one CPU
 core — CI scale) and a ``full`` shape (the paper's trace sizes, feasible now
@@ -144,6 +147,37 @@ SCENARIOS: Dict[str, Scenario] = {
                 ("burst_span", 60),
             ),
             trace_seed=6,
+        ),
+        Scenario(
+            name="real_like_cdn",
+            figure="Fig. 8 (left) / §5",
+            claim="stats-matched stand-in for the cdn trace: the tracelab "
+            "synthesizer reproduces its popularity skew / reuse profile so "
+            "the paper-scale comparison runs without shipping the dataset",
+            trace="real_like",
+            quick=(20_000, 200_000),
+            full=(1_000_000, 10_000_000),
+            cap_div=20,
+            trace_kw=(("source", "zipf"), ("alpha", 0.9)),
+            trace_seed=21,
+        ),
+        Scenario(
+            name="real_like_twitter",
+            figure="Fig. 8 (right) / §5",
+            claim="stats-matched stand-in for the twitter trace: short-lived "
+            "bursts survive the fit, so LRU still beats the static OPT and "
+            "OGB stays robust at synthesized scale",
+            trace="real_like",
+            quick=(20_000, 200_000),
+            full=(1_000_000, 10_000_000),
+            cap_div=20,
+            trace_kw=(
+                ("source", "bursty"),
+                ("burst_fraction", 0.5),
+                ("burst_len_mean", 8.0),
+                ("burst_span", 60),
+            ),
+            trace_seed=22,
         ),
         Scenario(
             name="fig11_cdn",

@@ -1,0 +1,58 @@
+"""Tracelab: real-trace ingestion + out-of-core streaming replay.
+
+The paper's headline experiment runs the log-complexity OGB policy on
+real-world traces with *millions of requests and items* — the regime the
+prior regret-guaranteed policies could not reach.  This package is the
+bridge from the generator-fed replay stack to that regime:
+
+* :mod:`~repro.cachesim.tracelab.loaders` — streaming readers for the
+  standard on-disk request-trace formats (CSV/TSV key-value traces à la
+  the twitter cache-trace, whitespace ``timestamp id size`` CDN logs, raw
+  binary uint32/uint64 id streams).  Chunked iteration: the full trace is
+  never materialized.
+* :mod:`~repro.cachesim.tracelab.catalog` — :class:`CatalogRemap`, the
+  streaming sparse-raw-id -> dense ``0..N-1`` remapper (first-seen order,
+  configurable out-of-catalog policy).
+* :mod:`~repro.cachesim.tracelab.synth` — the stats-matched workload
+  synthesizer: :func:`fit_profile` measures a real (or sampled) trace,
+  :func:`synthesize_chunks` emits arbitrarily long traces with matching
+  popularity skew, reuse-distance profile and popularity drift, in fixed
+  memory — so CI and benchmarks exercise "real-trace-shaped" workloads at
+  T >= 1e7 without shipping datasets.
+* :mod:`~repro.cachesim.tracelab.stream` — :func:`run_stream`, the
+  out-of-core replay driver: any registered
+  :class:`~repro.cachesim.api.PolicyDef` over any chunk iterator, layered
+  on the resumable ``api.run(carry=...)`` contract, in memory independent
+  of the trace length, with windowed hit-ratio and time-varying-OPT
+  ("dynamic regret" proxy) accumulation.
+"""
+
+from repro.cachesim.tracelab.catalog import CatalogRemap
+from repro.cachesim.tracelab.loaders import (
+    TRACE_FORMATS,
+    load_trace,
+    open_trace,
+    sniff_format,
+    write_trace,
+)
+from repro.cachesim.tracelab.stream import run_stream
+from repro.cachesim.tracelab.synth import (
+    TraceProfile,
+    fit_profile,
+    synthesize,
+    synthesize_chunks,
+)
+
+__all__ = [
+    "CatalogRemap",
+    "TRACE_FORMATS",
+    "TraceProfile",
+    "fit_profile",
+    "load_trace",
+    "open_trace",
+    "run_stream",
+    "sniff_format",
+    "synthesize",
+    "synthesize_chunks",
+    "write_trace",
+]

@@ -1,0 +1,234 @@
+"""Out-of-core streaming replay: any PolicyDef over any chunk iterator.
+
+:func:`run_stream` is the third execution surface next to ``api.run`` and
+``api.sweep`` — except it is *not* a third engine: it re-batches an
+arbitrary chunk iterator (a trace-file loader, a catalog remapper, the
+workload synthesizer, a live request tap) into fixed-shape segments and
+replays each one through the resumable ``api.run(carry=...)`` contract.
+Peak memory is O(segment + policy state), independent of the trace
+length, and the replayed dynamics are **bit-exact** equal to a one-shot
+in-memory ``api.run`` over the concatenated trace — whatever the incoming
+chunking (PR-4's streaming tests are the foundation; the tracelab
+differential sweep extends them to the ingestion path).
+
+Fixed-shape segments matter: ``api.run`` memoizes compiled executables on
+the chunk shape, so a multi-gigabyte stream costs two compilations (the
+steady-state segment and the tail), not one per chunk.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Iterable, Iterator, Optional, Union
+
+import numpy as np
+
+from repro.cachesim import api
+from repro.cachesim.results import StreamResult
+from repro.core.regret import best_static_hits
+
+#: default steady-state segment length (requests per device dispatch)
+DEFAULT_SEGMENT = 131_072
+
+
+def _as_chunks(
+    chunks: Union[np.ndarray, Iterable[np.ndarray]],
+) -> Iterator[np.ndarray]:
+    if isinstance(chunks, np.ndarray):
+        yield chunks
+        return
+    for c in chunks:
+        yield np.asarray(c)
+
+
+def run_stream(
+    pd: "api.PolicyDef",
+    chunks: Union[np.ndarray, Iterable[np.ndarray]],
+    catalog_size: Optional[int] = None,
+    capacity: Optional[int] = None,
+    *,
+    window: int = 1000,
+    segment_len: Optional[int] = None,
+    carry: Any = None,
+    seed: int = 0,
+    eta: Optional[float] = None,
+    horizon: Optional[int] = None,
+    n_slots: Optional[int] = None,
+    opt_window: Optional[int] = None,
+    keep_carry: bool = True,
+    name: Optional[str] = None,
+) -> StreamResult:
+    """Replay a chunk iterator through one policy in fixed memory.
+
+    ``chunks`` yields 1-D int arrays of dense ids in ``[0, catalog_size)``
+    (route raw traces through
+    :class:`~repro.cachesim.tracelab.catalog.CatalogRemap` first).  They
+    are re-buffered into ``segment_len``-request segments (rounded down to
+    a multiple of ``window``; the incoming chunking never changes the
+    replayed dynamics) and each segment resumes the previous one's carry
+    via ``api.run(carry=...)``.  A trailing remainder shorter than one
+    ``window`` is dropped — exactly like the one-shot ``api.run`` — and
+    reported as ``t_dropped``.
+
+    ``horizon`` is the *planned* total stream length and is required on a
+    fresh (non-resumed) stream: it seeds horizon-tuned policies (FTPL's
+    noise scale, OGB/OMD's ``eta=None`` resolution via ``pd.default_eta``)
+    and a stream cannot know its own length up front.  For bit-exact
+    parity with a one-shot ``api.run`` over the same trace, pass the same
+    ``horizon``/``eta``/``seed``.
+
+    ``opt_window`` (a multiple of ``window``; rounded up) additionally
+    computes the hindsight-optimal *per-window* static allocation on the
+    host while the stream passes by — the time-varying comparator behind
+    :attr:`~repro.cachesim.results.StreamResult.dynamic_regret`.
+
+    Pass ``carry=`` to resume a previous stream's final carry; as with
+    ``api.run``, the carry holds every policy parameter, so
+    ``seed``/``eta``/``horizon``/``n_slots`` must not be re-passed.
+    """
+    if window <= 0:
+        raise ValueError(f"window must be positive, got {window}")
+    if segment_len is None:
+        segment_len = max(window, (DEFAULT_SEGMENT // window) * window)
+    else:
+        segment_len = max(window, (int(segment_len) // window) * window)
+    if opt_window is not None:
+        if capacity is None:
+            raise ValueError("opt_window needs capacity")
+        opt_window = max(1, -(-int(opt_window) // window)) * window
+
+    resumed = carry is not None
+    if not resumed:
+        if catalog_size is None or capacity is None:
+            raise ValueError(
+                "run_stream() needs catalog_size and capacity (or carry=)"
+            )
+        if horizon is None:
+            # a one-shot api.run can default horizon to the trace length; a
+            # stream cannot know its own length, and letting horizon-tuned
+            # policies (FTPL's noise scale, eta=None resolution) silently
+            # tune to the *first segment* length would break the bit-exact
+            # parity with the one-shot replay
+            raise ValueError(
+                "run_stream() needs horizon= (the planned total stream "
+                "length): a stream cannot infer it, and horizon-tuned "
+                "policies would otherwise mis-tune to the first segment"
+            )
+        if eta is None and pd.default_eta is not None:
+            eta = pd.default_eta(
+                int(catalog_size), int(capacity), int(horizon), window
+            )
+    elif (
+        eta is not None
+        or horizon is not None
+        or n_slots is not None
+        or seed != 0
+    ):
+        raise ValueError(
+            "run_stream(carry=...) resumes with the carry's parameters; do "
+            "not pass seed/eta/horizon/n_slots alongside a carry"
+        )
+
+    reward, hits, aux, occupancy = [], [], [], []
+    dyn_opt: list = []
+    opt_buf: list = []
+    opt_buffered = 0
+    n_segments = 0
+    t_used = 0
+    extras: dict = {}
+
+    t0 = time.perf_counter()
+
+    def _flush_segment(seg: np.ndarray):
+        nonlocal carry, n_segments, t_used, opt_buffered
+        run_kw = dict(window=window, track_opt=False, name=name)
+        if carry is None:
+            res = api.run(
+                pd, seg, catalog_size, capacity, seed=seed, eta=eta,
+                horizon=horizon, n_slots=n_slots, **run_kw,
+            )
+            extras.update(res.extras)
+        else:
+            res = api.run(pd, seg, capacity=capacity, carry=carry, **run_kw)
+        carry = res.carry
+        reward.append(res.reward)
+        hits.append(res.hits)
+        aux.append(res.aux)
+        occupancy.append(res.occupancy)
+        n_segments += 1
+        t_used += res.T
+        if opt_window is not None:
+            opt_buf.append(seg)
+            opt_buffered += len(seg)
+            while opt_buffered >= opt_window:
+                merged = np.concatenate(opt_buf) if len(opt_buf) > 1 else (
+                    opt_buf[0]
+                )
+                dyn_opt.append(
+                    float(best_static_hits(merged[:opt_window], int(capacity)))
+                )
+                rest = merged[opt_window:]
+                opt_buf[:] = [rest] if rest.size else []
+                opt_buffered = rest.size
+
+    buf: list = []
+    buffered = 0
+    for chunk in _as_chunks(chunks):
+        chunk = np.asarray(chunk, dtype=np.int64).ravel()
+        if chunk.size == 0:
+            continue
+        if catalog_size is not None and not (
+            0 <= int(chunk.min()) and int(chunk.max()) < catalog_size
+        ):
+            # an out-of-range dense id would be silently clamped by the
+            # device gather (aliasing item N-1) — corrupt results, no error
+            raise ValueError(
+                f"stream ids must be dense in [0, {catalog_size}): got "
+                f"[{int(chunk.min())}, {int(chunk.max())}] — route raw "
+                "traces through CatalogRemap (with max_items=catalog_size) "
+                "first"
+            )
+        buf.append(chunk)
+        buffered += chunk.size
+        while buffered >= segment_len:
+            merged = np.concatenate(buf) if len(buf) > 1 else buf[0]
+            _flush_segment(merged[:segment_len])
+            rest = merged[segment_len:]
+            buf = [rest] if rest.size else []
+            buffered = rest.size
+    # tail: whole windows replay as one final (differently shaped) segment
+    t_dropped = 0
+    if buffered:
+        merged = np.concatenate(buf) if len(buf) > 1 else buf[0]
+        aligned = (buffered // window) * window
+        if aligned:
+            _flush_segment(merged[:aligned])
+        t_dropped = buffered - aligned
+    wall = time.perf_counter() - t0
+
+    if t_used == 0:
+        raise ValueError(
+            f"stream shorter than one window ({t_dropped} < {window})"
+        )
+
+    return StreamResult(
+        name=name or pd.name,
+        kind=pd.kind,
+        T=t_used,
+        window=window,
+        capacity=int(capacity) if capacity is not None else -1,
+        reward=np.concatenate(reward),
+        hits=np.concatenate(hits),
+        aux=np.concatenate(aux),
+        occupancy=np.concatenate(occupancy),
+        opt_hits=0.0,
+        carry=carry if keep_carry else None,
+        wall_seconds=wall,
+        extras=extras,
+        dyn_opt_hits=(
+            np.asarray(dyn_opt, np.float64) if opt_window is not None else None
+        ),
+        dyn_opt_window=opt_window or 0,
+        n_segments=n_segments,
+        t_dropped=t_dropped,
+    )

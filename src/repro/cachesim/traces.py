@@ -145,6 +145,37 @@ def scan_mix(
     return out
 
 
+def real_like(
+    N: int,
+    T: int,
+    source: str = "zipf",
+    sample_T: Optional[int] = None,
+    seed: int = 0,
+    **source_kw,
+) -> np.ndarray:
+    """Stats-matched "real-trace-shaped" workload (tracelab synthesizer).
+
+    Stands in for the paper's real traces without shipping datasets: a
+    ``source`` trace is sampled (``sample_T`` requests, a few percent of a
+    paper-scale T), its §B.2 statistics are fitted
+    (:func:`repro.cachesim.tracelab.synth.fit_profile`), and a trace of
+    the requested length is synthesized with matching popularity skew,
+    reuse-distance profile and drift.  For out-of-core lengths use
+    :func:`repro.cachesim.tracelab.synth.synthesize_chunks` directly —
+    this registry entry materializes.
+    """
+    from repro.cachesim.tracelab.synth import fit_profile, synthesize
+
+    if sample_T is None:
+        sample_T = int(np.clip(T // 10, 2_000, 200_000))
+    # the sample catalog scales with the sample so fitted per-item stats
+    # (one-shot share, burst composition) survive the T extrapolation
+    sample_N = max(min(N, max(sample_T // 10, 8)), 1)
+    sample = TRACE_REGISTRY[source](sample_N, sample_T, seed=seed, **source_kw)
+    profile = fit_profile(sample)
+    return synthesize(profile, T, catalog=N, seed=seed + 1)
+
+
 TRACE_REGISTRY = {
     "adversarial": adversarial,
     "zipf": zipf,
@@ -155,6 +186,7 @@ TRACE_REGISTRY = {
     "twitter_like": bursty,
     "scan_mix": scan_mix,
     "systor_like": scan_mix,
+    "real_like": real_like,
 }
 
 
@@ -209,32 +241,59 @@ class TraceStats:
 
 
 def trace_stats(trace: np.ndarray) -> TraceStats:
-    """O(T + N) vectorized lifetime statistics (no per-request Python).
+    """Vectorized lifetime statistics, correct on sparse/gappy id sets.
 
-    first/last positions fall out of two fancy-index writes: assigning
-    ``np.arange(T)`` at ``trace`` keeps the *last* write per item, and the
-    same assignment on the reversed trace keeps the *first*.
+    Ids need not be dense ``0..N-1``: raw logs (block addresses, hashed
+    keys) carry sparse 64-bit ids, and allocating ``max(id)+1`` arrays for
+    them would OOM long before the trace does.  Two equivalent paths:
+
+    * **dense** (``max(id)`` comparable to the trace length) — O(T + N):
+      first/last positions fall out of two fancy-index writes (assigning
+      ``np.arange(T)`` at ``trace`` keeps the *last* write per item; the
+      same on the reversed trace keeps the *first*);
+    * **sparse** — O(T log T): ``np.unique`` compresses the id set first
+      and the identical fancy-index writes run on the inverse codes.
+
+    Both return identical results (``items`` ascending); only the memory
+    scaling differs.  ``catalog`` is always ``max(id) + 1`` — a label for
+    the id *space*, not an allocation size.
     """
     trace = np.asarray(trace, dtype=np.int64)
     t_len = len(trace)
     if t_len == 0:
         e = np.empty(0, np.int64)
         return TraceStats(0, 0, 0, e, e, e)
+    if trace.min() < 0:
+        raise ValueError("trace_stats: negative item ids")
     n = int(trace.max()) + 1
-    counts = np.bincount(trace, minlength=n)
     pos = np.arange(t_len, dtype=np.int64)
-    last = np.full(n, -1, np.int64)
-    last[trace] = pos
-    first = np.full(n, -1, np.int64)
-    first[trace[::-1]] = t_len - 1 - pos
-    items = np.nonzero(counts)[0]
+    if n <= max(4 * t_len, 1 << 22):  # dense ids: O(T + N) histogram path
+        counts = np.bincount(trace, minlength=n)
+        last = np.full(n, -1, np.int64)
+        last[trace] = pos
+        first = np.full(n, -1, np.int64)
+        first[trace[::-1]] = t_len - 1 - pos
+        items = np.nonzero(counts)[0]
+        lifetimes = last[items] - first[items]
+        max_hits = counts[items] - 1
+    else:  # sparse/gappy ids: compress through np.unique first
+        items, inverse, counts = np.unique(
+            trace, return_inverse=True, return_counts=True
+        )
+        u = len(items)
+        last = np.full(u, -1, np.int64)
+        last[inverse] = pos
+        first = np.full(u, -1, np.int64)
+        first[inverse[::-1]] = t_len - 1 - pos
+        lifetimes = last - first
+        max_hits = counts - 1
     return TraceStats(
         catalog=n,
         length=t_len,
         unique=len(items),
         items=items,
-        lifetimes=last[items] - first[items],
-        max_hits=counts[items] - 1,
+        lifetimes=lifetimes,
+        max_hits=max_hits,
     )
 
 

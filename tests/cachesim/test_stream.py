@@ -1,0 +1,283 @@
+"""Differential sweep: out-of-core ``run_stream`` == in-memory ``api.run``.
+
+PR 4 proved the carry contract resumes bit-exactly when *the caller*
+splits an in-memory trace; this module extends that guarantee to the
+ingestion path: a trace that arrives as loader chunks from disk (through
+the catalog remapper) or as synthesizer chunks must replay **bit-exact**
+identically to a one-shot in-memory run — hits, fractional reward, and
+every leaf of the final carry — for every registered trace-driven
+PolicyDef kind, whatever the incoming chunking.
+"""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.cachesim import api
+from repro.cachesim.results import StreamResult
+from repro.cachesim.tracelab import (
+    CatalogRemap,
+    fit_profile,
+    open_trace,
+    run_stream,
+    synthesize,
+    synthesize_chunks,
+    write_trace,
+)
+from repro.cachesim.traces import zipf
+from repro.core.regret import best_static_hits
+
+#: every kind the one run/sweep engine serves on request-id traces
+STREAM_KINDS = tuple(
+    k for k in api.policy_def_kinds() if api.policy_def(k).trace_driven
+)
+
+N, C, T = 311, 23, 6400
+WINDOW = 16
+
+
+def _kind_kwargs(kind):
+    """eta is only a fractional-policy parameter."""
+    return {"eta": 0.03} if api.policy_def(kind).fractional else {}
+
+
+def test_stream_kinds_cover_the_registry():
+    # the sweep below must cover every replayable kind (ogb_grad streams
+    # dense gradients, not request ids, and is rightly excluded)
+    assert set(STREAM_KINDS) == {"ogb", "omd", "lru", "fifo", "lfu", "ftpl"}
+
+
+@pytest.mark.parametrize("kind", STREAM_KINDS)
+def test_run_stream_matches_in_memory_run(kind):
+    """Ragged ingestion chunks + segment re-batching == one-shot api.run."""
+    trace = zipf(N, T, alpha=0.9, seed=3)
+    pd = api.policy_def(kind)
+    kw = _kind_kwargs(kind)
+    full = api.run(
+        pd, trace, N, C, window=WINDOW, seed=0, horizon=T, track_opt=False,
+        **kw,
+    )
+    # ragged chunks (prime-sized) forced through small segments: every
+    # segment boundary is a carry hand-off
+    chunks = (trace[i : i + 997] for i in range(0, T, 997))
+    sr = run_stream(
+        pd, chunks, N, C, window=WINDOW, seed=0, horizon=T,
+        segment_len=2048, **kw,
+    )
+    assert isinstance(sr, StreamResult)
+    assert sr.T == full.T and sr.n_segments > 1
+    np.testing.assert_array_equal(sr.hits, full.hits)
+    np.testing.assert_array_equal(sr.reward, full.reward)
+    np.testing.assert_array_equal(sr.aux, full.aux)
+    np.testing.assert_array_equal(sr.occupancy, full.occupancy)
+    for a, b in zip(jax.tree.leaves(sr.carry), jax.tree.leaves(full.carry)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("kind", ("ogb", "lfu"))
+def test_run_stream_from_disk_through_remap(kind):
+    """The full ingestion path: sparse ids on disk -> loader chunks ->
+    catalog remap -> run_stream, vs api.run over the densified trace."""
+    trace = zipf(N, T, alpha=0.9, seed=5)
+    sparse = trace * 1_000_003 + 17  # sparse raw ids, same structure
+    with tempfile.TemporaryDirectory() as d:
+        path = write_trace(os.path.join(d, "trace.csv"), sparse)
+        dense = CatalogRemap().apply(sparse)
+        assert dense.max() < N and len(np.unique(dense)) == len(
+            np.unique(trace)
+        )
+        pd = api.policy_def(kind)
+        kw = _kind_kwargs(kind)
+        full = api.run(
+            pd, dense, N, C, window=WINDOW, seed=0, horizon=T,
+            track_opt=False, **kw,
+        )
+        cr = CatalogRemap()
+        sr = run_stream(
+            pd,
+            cr.remap(open_trace(path, chunk_size=1013)),
+            N,
+            C,
+            window=WINDOW,
+            seed=0,
+            horizon=T,
+            segment_len=2048,
+            **kw,
+        )
+        np.testing.assert_array_equal(sr.hits, full.hits)
+        np.testing.assert_array_equal(sr.reward, full.reward)
+        for a, b in zip(
+            jax.tree.leaves(sr.carry), jax.tree.leaves(full.carry)
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("kind", ("ogb", "lru"))
+def test_run_stream_over_synthesizer_chunks(kind):
+    """Out-of-core synthesis == materialized synthesis, through the replay."""
+    src = zipf(800, 20_000, alpha=0.9, seed=8)
+    prof = fit_profile(src)
+    t = 12_800
+    mat = synthesize(prof, t, catalog=800, seed=4)
+    pd = api.policy_def(kind)
+    kw = _kind_kwargs(kind)
+    full = api.run(
+        pd, mat, 800, 40, window=64, seed=0, horizon=t, track_opt=False, **kw
+    )
+    sr = run_stream(
+        pd,
+        synthesize_chunks(prof, t, catalog=800, seed=4, chunk_size=3001),
+        800,
+        40,
+        window=64,
+        seed=0,
+        horizon=t,
+        segment_len=4096,
+        **kw,
+    )
+    np.testing.assert_array_equal(sr.hits, full.hits)
+    np.testing.assert_array_equal(sr.reward, full.reward)
+
+
+def test_chunking_never_changes_the_replay():
+    """Any split of the same stream gives identical results (and identical
+    trailing-drop semantics)."""
+    trace = zipf(N, 5000, alpha=0.8, seed=9)  # 5000 = 312*16 + 8: a tail
+    pd = api.policy_def("lfu")
+    results = []
+    for chunk_size in (1, 97, 1024, 5000):
+        chunks = (
+            trace[i : i + chunk_size] for i in range(0, 5000, chunk_size)
+        )
+        sr = run_stream(
+            pd, chunks, N, C, window=WINDOW, horizon=5000, segment_len=1024
+        )
+        assert sr.t_dropped == 5000 % WINDOW
+        assert sr.T == 5000 - sr.t_dropped
+        results.append(sr)
+    for sr in results[1:]:
+        np.testing.assert_array_equal(sr.hits, results[0].hits)
+        np.testing.assert_array_equal(sr.reward, results[0].reward)
+
+
+def test_dynamic_opt_windows():
+    """dyn_opt_hits[k] is exactly the hindsight static OPT of window k,
+    and the dynamic comparator dominates the static one."""
+    trace = zipf(N, T, alpha=0.9, seed=11)
+    pd = api.policy_def("lru")
+    opt_window = 640
+    sr = run_stream(
+        pd, trace, N, C, window=WINDOW, horizon=T, opt_window=opt_window
+    )
+    assert sr.dyn_opt_window == opt_window
+    assert len(sr.dyn_opt_hits) == T // opt_window
+    for k in range(len(sr.dyn_opt_hits)):
+        blk = trace[k * opt_window : (k + 1) * opt_window]
+        assert sr.dyn_opt_hits[k] == float(best_static_hits(blk, C))
+    static = float(best_static_hits(trace, C))
+    assert sr.dynamic_opt_total >= static - 1e-9
+    assert sr.dynamic_regret >= sr.dynamic_opt_total - float(
+        sr.reward.sum()
+    ) - 1e-6  # covered prefix == whole trace here
+    np.testing.assert_allclose(
+        sr.dyn_opt_ratio(), sr.dyn_opt_hits / opt_window
+    )
+
+
+def test_dynamic_opt_window_rounds_up_to_whole_windows():
+    trace = zipf(N, T, alpha=0.9, seed=12)
+    sr = run_stream(
+        api.policy_def("fifo"), trace, N, C, window=WINDOW, horizon=T,
+        opt_window=WINDOW + 1,  # not a multiple: rounds up to 2 windows
+    )
+    assert sr.dyn_opt_window == 2 * WINDOW
+
+
+def test_stream_resume_with_carry():
+    """A second run_stream resumes the first one's carry — together they
+    equal one longer stream (the api.run resume contract, lifted)."""
+    trace = zipf(N, T, alpha=0.9, seed=13)
+    pd = api.policy_def("ftpl")
+    full = run_stream(
+        pd, trace, N, C, window=WINDOW, horizon=T, segment_len=1024
+    )
+    first = run_stream(
+        pd, trace[: T // 2], N, C, window=WINDOW, horizon=T,
+        segment_len=1024,
+    )
+    second = run_stream(
+        pd, trace[T // 2 :], capacity=C, carry=first.carry, window=WINDOW,
+        segment_len=1024,
+    )
+    np.testing.assert_array_equal(
+        np.concatenate([first.hits, second.hits]), full.hits
+    )
+    for a, b in zip(
+        jax.tree.leaves(second.carry), jax.tree.leaves(full.carry)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_tracelab_public_surface():
+    """The tracelab entry points re-export from the `repro` top level."""
+    import repro
+
+    assert repro.run_stream is run_stream
+    assert repro.fit_profile is fit_profile
+    assert repro.CatalogRemap is CatalogRemap
+    assert repro.open_trace is open_trace
+    assert repro.StreamResult is StreamResult
+
+
+def test_stream_rejects_out_of_range_ids():
+    """An id >= catalog_size would be silently clamped by the device
+    gather (aliasing item N-1 into a phantom hot item) — it must raise."""
+    trace = zipf(N, 2000, seed=2)
+    bad = trace.copy()
+    bad[777] = N + 500
+    pd = api.policy_def("lru")
+    with pytest.raises(ValueError, match=r"dense in \[0"):
+        run_stream(pd, bad, N, C, window=WINDOW, horizon=2000)
+    with pytest.raises(ValueError, match=r"dense in \[0"):
+        run_stream(pd, trace - 1, N, C, window=WINDOW, horizon=2000)
+
+
+def test_stream_requires_horizon_for_horizon_tuned_policies():
+    """FTPL's noise scale is horizon-tuned: without an explicit horizon a
+    stream would silently tune it to the first *segment* length and lose
+    the bit-exact one-shot parity — so horizon is required up front."""
+    trace = zipf(N, T, alpha=0.9, seed=14)
+    with pytest.raises(ValueError, match="needs horizon"):
+        run_stream(
+            api.policy_def("ftpl"), trace, N, C, window=WINDOW,
+            segment_len=2048,
+        )
+
+
+def test_stream_error_paths():
+    trace = zipf(N, 2000, seed=1)
+    pd = api.policy_def("lru")
+    with pytest.raises(ValueError, match="catalog_size and capacity"):
+        run_stream(pd, trace, window=WINDOW)
+    with pytest.raises(ValueError, match="needs horizon"):
+        run_stream(api.policy_def("ogb"), trace, N, C, window=WINDOW)
+    with pytest.raises(ValueError, match="shorter than one window"):
+        run_stream(pd, trace[:5], N, C, window=WINDOW, horizon=T)
+    with pytest.raises(ValueError, match="opt_window needs capacity"):
+        run_stream(
+            pd, trace, N, carry=object(), window=WINDOW, opt_window=64
+        )
+    first = run_stream(pd, trace, N, C, window=WINDOW, horizon=2000)
+    with pytest.raises(ValueError, match="carry's parameters"):
+        run_stream(
+            pd, trace, capacity=C, carry=first.carry, window=WINDOW, seed=3
+        )
+    # dynamic-OPT views raise cleanly when opt_window was never set
+    with pytest.raises(ValueError, match="opt_window"):
+        first.dynamic_regret
+    with pytest.raises(ValueError, match="opt_window"):
+        first.dyn_opt_ratio()

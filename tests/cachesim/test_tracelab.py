@@ -1,0 +1,335 @@
+"""Tracelab ingestion: loaders, error paths, catalog remap, synthesizer fit.
+
+The bundled fixtures under ``tests/cachesim/data/`` are a few KB of every
+supported on-disk format over the *same* sparse raw-id stream (gappy
+64-bit block-address-style ids), so cross-format agreement is asserted
+directly; ``malformed.csv`` / ``truncated.u32`` / ``overflow.u64`` pin the
+loader error paths.  The sparse-id regressions lock the
+``trace_stats``/``reuse_distances`` fix: both must be correct (and not
+OOM) on id sets nowhere near dense ``0..N-1``.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.cachesim.tracelab import (
+    CatalogRemap,
+    fit_profile,
+    load_trace,
+    open_trace,
+    sniff_format,
+    synthesize,
+    write_trace,
+)
+from repro.cachesim.tracelab.catalog import remap_trace
+from repro.cachesim.traces import (
+    bursty,
+    make_trace,
+    reuse_distances,
+    shifting_zipf,
+    trace_stats,
+    zipf,
+)
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+
+# ---------------------------------------------------------------------------
+# loaders: the bundled fixtures all encode the same raw stream
+# ---------------------------------------------------------------------------
+def test_fixture_formats_agree():
+    csv = load_trace(os.path.join(DATA, "sample.csv"))
+    u64 = load_trace(os.path.join(DATA, "sample.u64"))
+    assert len(csv) == 200
+    np.testing.assert_array_equal(csv, u64)
+    # the other fixtures are prefixes of the same stream
+    np.testing.assert_array_equal(
+        load_trace(os.path.join(DATA, "sample.tsv")), csv[:120]
+    )
+    np.testing.assert_array_equal(
+        load_trace(os.path.join(DATA, "sample_cdn.log")), csv[:150]
+    )
+    np.testing.assert_array_equal(
+        load_trace(os.path.join(DATA, "sample.u32")),
+        csv[:200] % (1 << 31),
+    )
+
+
+def test_header_handling():
+    path = os.path.join(DATA, "sample.csv")
+    # auto (default) tolerates the header row; "skip" drops it explicitly;
+    # "none" treats it as data and fails
+    assert len(load_trace(path)) == 200
+    assert len(load_trace(path, header="skip")) == 200
+    with pytest.raises(ValueError, match="bad trace line"):
+        load_trace(path, header="none")
+
+
+def test_chunked_load_is_chunk_size_invariant():
+    path = os.path.join(DATA, "sample.csv")
+    want = load_trace(path)
+    for chunk_size in (1, 7, 64, 10_000):
+        got = np.concatenate(list(open_trace(path, chunk_size=chunk_size)))
+        np.testing.assert_array_equal(got, want)
+        sizes = [len(c) for c in open_trace(path, chunk_size=chunk_size)]
+        assert all(s == chunk_size for s in sizes[:-1])
+        assert 0 < sizes[-1] <= chunk_size
+
+
+def test_malformed_lines_raise_with_position():
+    path = os.path.join(DATA, "malformed.csv")
+    with pytest.raises(ValueError, match=r"malformed\.csv:4"):
+        load_trace(path)  # line 4 has one field
+
+
+def test_malformed_lines_skip_policy():
+    got = load_trace(os.path.join(DATA, "malformed.csv"), on_bad="skip")
+    np.testing.assert_array_equal(got, [17, 4096, 9])
+
+
+def test_hash_key_mode_rejects_header_auto():
+    """hash mode parses every string, so a header row cannot be
+    auto-detected — it would be ingested as a phantom first-seen item and
+    shift every dense id; the combination must raise."""
+    with pytest.raises(ValueError, match="auto-detected"):
+        load_trace(os.path.join(DATA, "sample.csv"), key_mode="hash")
+
+
+def test_hash_key_mode_loads_string_keys():
+    got = load_trace(
+        os.path.join(DATA, "malformed.csv"), key_mode="hash", on_bad="skip",
+        header="skip",
+    )
+    # every id line hashes (including "not_an_id"); the 1-field line skips
+    assert len(got) == 4
+    assert got.min() >= 0  # digests folded into non-negative int64
+    again = load_trace(
+        os.path.join(DATA, "malformed.csv"), key_mode="hash", on_bad="skip",
+        header="skip",
+    )
+    np.testing.assert_array_equal(got, again)  # stable digests
+
+
+def test_truncated_binary_raises():
+    with pytest.raises(ValueError, match="truncated"):
+        list(open_trace(os.path.join(DATA, "truncated.u32")))
+
+
+def test_id_overflow_raises():
+    with pytest.raises(ValueError, match="overflows int64"):
+        load_trace(os.path.join(DATA, "overflow.u64"))
+    # text path: an overflowed id is not skippable even with on_bad="skip"
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "over.csv")
+        with open(p, "w") as f:
+            f.write(f"0,{1 << 70},1\n")
+        with pytest.raises(ValueError, match="overflows int64"):
+            load_trace(p, header="none", on_bad="skip")
+
+
+def test_unknown_and_ambiguous_formats():
+    with pytest.raises(ValueError, match="cannot infer"):
+        sniff_format("trace.bin")  # .bin is ambiguous between u32/u64
+    with pytest.raises(ValueError, match="unknown trace format"):
+        load_trace(os.path.join(DATA, "sample.csv"), format="parquet")
+    with pytest.raises(ValueError, match="chunk_size"):
+        list(open_trace(os.path.join(DATA, "sample.csv"), chunk_size=0))
+
+
+def test_write_trace_bin32_overflow():
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(ValueError, match="uint32"):
+            write_trace(os.path.join(d, "t.u32"), [1 << 40])
+
+
+# ---------------------------------------------------------------------------
+# catalog remap
+# ---------------------------------------------------------------------------
+def test_remap_first_seen_density():
+    cr = CatalogRemap()
+    out = np.concatenate(
+        list(cr.remap(open_trace(os.path.join(DATA, "sample.csv"),
+                                 chunk_size=13)))
+    )
+    raw = load_trace(os.path.join(DATA, "sample.csv"))
+    # dense 0..N-1, first-seen monotone: a new dense id is always the next
+    # integer, and the raw id behind dense d is raw[first occurrence of d]
+    seen = {}
+    want = np.empty_like(raw)
+    for i, v in enumerate(raw.tolist()):
+        if v not in seen:
+            seen[v] = len(seen)
+        want[i] = seen[v]
+    np.testing.assert_array_equal(out, want)
+    assert len(cr) == len(seen)
+    np.testing.assert_array_equal(
+        cr.raw_ids, sorted(seen, key=seen.get)
+    )
+
+
+def test_remap_overflow_raise():
+    cr = CatalogRemap(max_items=2)
+    with pytest.raises(ValueError, match="catalog overflow"):
+        cr.apply(np.array([5, 6, 7]))
+
+
+def test_remap_overflow_drop():
+    cr = CatalogRemap(max_items=2, overflow="drop")
+    out = cr.apply(np.array([5, 6, 7, 5, 7, 6]))
+    np.testing.assert_array_equal(out, [0, 1, 0, 1])  # 7's requests removed
+    assert cr.dropped == 2
+    # a dropped id stays dropped in later chunks
+    np.testing.assert_array_equal(cr.apply(np.array([7, 5])), [0])
+    assert cr.dropped == 3
+
+
+def test_remap_overflow_clamp():
+    cr = CatalogRemap(max_items=3, overflow="clamp")
+    out = cr.apply(np.array([5, 6, 7, 8, 5, 7]))
+    # two real items + the shared bucket id 2
+    np.testing.assert_array_equal(out, [0, 1, 2, 2, 0, 2])
+    assert len(cr) == 3 and cr.clamped == 3
+    assert cr.raw_ids[-1] == -1  # the bucket has no single raw id
+
+
+def test_remap_trace_one_shot():
+    out = remap_trace([10**15, 3, 10**15, 99])
+    np.testing.assert_array_equal(out, [0, 1, 0, 2])
+
+
+def test_remap_overflow_memory_stays_bounded():
+    """drop/clamp must not record each distinct overflow id: on hashed
+    out-of-core streams that dict would grow without bound — the exact
+    case the bounded-catalog modes exist for."""
+    for mode in ("drop", "clamp"):
+        cr = CatalogRemap(max_items=4, overflow=mode)
+        cr.apply(np.arange(10_000) * 17)
+        assert len(cr._table) <= 4
+        # behavior unchanged: later chunks still drop/clamp consistently
+        out = cr.apply(np.asarray([17 * 9_999, 0]))
+        if mode == "drop":
+            np.testing.assert_array_equal(out, [0])
+        else:
+            np.testing.assert_array_equal(out, [3, 0])
+
+
+# ---------------------------------------------------------------------------
+# sparse-id regressions for trace_stats / reuse_distances
+# ---------------------------------------------------------------------------
+def test_trace_stats_sparse_ids_match_dense_relabeling():
+    """Non-contiguous raw ids must give the same stats as their dense
+    relabeling (the pre-fix code silently assumed dense 0..N-1 and would
+    allocate max(id)+1 arrays)."""
+    rng = np.random.default_rng(0)
+    raw_ids = np.array([7, 10**9 + 33, 3, 10**14, 9_999_999_999], np.int64)
+    trace = raw_ids[rng.integers(0, len(raw_ids), size=5000)]
+    st_sparse = trace_stats(trace)  # must not OOM on max(id)+1 ~ 1e14
+    assert st_sparse.catalog == 10**14 + 1
+    assert st_sparse.unique == 5
+    np.testing.assert_array_equal(st_sparse.items, np.sort(raw_ids))
+
+    # dense relabeling preserving order-of-value (items are ascending)
+    dense = np.searchsorted(np.sort(raw_ids), trace)
+    st_dense = trace_stats(dense)
+    np.testing.assert_array_equal(st_sparse.lifetimes, st_dense.lifetimes)
+    np.testing.assert_array_equal(st_sparse.max_hits, st_dense.max_hits)
+    assert st_sparse.hit_share_lifetime_below(100) == (
+        st_dense.hit_share_lifetime_below(100)
+    )
+
+
+def test_trace_stats_dense_and_sparse_paths_agree():
+    """The two internal paths must return identical results; force the
+    sparse path by planting one huge id in an otherwise dense trace."""
+    tr = zipf(500, 8000, seed=11)
+    st_dense = trace_stats(tr)
+    spread = tr * (10**10)  # same structure, ids now gappy
+    st_sparse = trace_stats(spread)
+    np.testing.assert_array_equal(st_sparse.items, st_dense.items * 10**10)
+    np.testing.assert_array_equal(st_sparse.lifetimes, st_dense.lifetimes)
+    np.testing.assert_array_equal(st_sparse.max_hits, st_dense.max_hits)
+    assert st_sparse.unique == st_dense.unique
+
+
+def test_trace_stats_negative_ids_raise():
+    with pytest.raises(ValueError, match="negative"):
+        trace_stats(np.array([1, -4, 2]))
+
+
+def test_reuse_distances_sparse_ids():
+    rd = reuse_distances(np.array([10**13, 5, 10**13, 5, 10**13]))
+    np.testing.assert_array_equal(rd, [2, 2, 2])
+
+
+# ---------------------------------------------------------------------------
+# synthesizer calibration: the fitted statistics survive synthesis
+# ---------------------------------------------------------------------------
+def test_profile_matches_popularity_skew():
+    src = zipf(2000, 60_000, alpha=0.9, seed=4)
+    prof = fit_profile(src)
+    syn = synthesize(prof, 60_000, catalog=2000, seed=9)
+
+    def top_share(tr, k):
+        c = np.sort(np.bincount(tr, minlength=2000))[::-1]
+        return c[:k].sum() / len(tr)
+
+    for k in (20, 200):
+        assert abs(top_share(syn, k) - top_share(src, k)) < 0.1, k
+
+
+def test_profile_matches_oneshot_and_burst_composition():
+    src = bursty(4000, 60_000, burst_fraction=0.4, seed=5)
+    prof = fit_profile(src)
+    assert prof.burst_frac > 0.02  # the fit saw the short-lived overlay
+    syn = synthesize(prof, 60_000, catalog=4000, seed=3)
+    src_share = trace_stats(src).hit_share_lifetime_below(100)
+    syn_share = trace_stats(syn).hit_share_lifetime_below(100)
+    assert abs(syn_share - src_share) < 0.15
+    syn_prof = fit_profile(syn)
+    assert abs(syn_prof.oneshot_frac - prof.oneshot_frac) < 0.05
+    assert abs(syn_prof.burst_frac - prof.burst_frac) < 0.1
+
+
+def test_profile_matches_reuse_profile():
+    src = zipf(1000, 50_000, alpha=0.8, seed=6)
+    prof = fit_profile(src)
+    syn = synthesize(prof, 50_000, catalog=1000, seed=2)
+    med_src = np.median(reuse_distances(src))
+    med_syn = np.median(reuse_distances(syn))
+    assert 0.25 < med_syn / med_src < 4.0
+
+
+def test_profile_detects_and_reproduces_drift():
+    src = shifting_zipf(2000, 64_000, phase=8000, seed=7)
+    assert fit_profile(src).drift_phase == 8000
+    # a stationary source fits as stationary
+    assert fit_profile(zipf(2000, 64_000, seed=7)).drift_phase == 0
+    # synthesized drift: consecutive phases have (mostly) disjoint hot sets
+    prof = fit_profile(src)
+    syn = synthesize(prof, 32_000, catalog=2000, seed=1)
+    c1 = np.bincount(syn[:8000], minlength=2000)
+    c2 = np.bincount(syn[8000:16000], minlength=2000)
+    top1 = set(np.argsort(c1)[-20:].tolist())
+    top2 = set(np.argsort(c2)[-20:].tolist())
+    assert len(top1 & top2) < 10
+
+
+def test_fit_profile_empty_trace_raises():
+    with pytest.raises(ValueError, match="empty"):
+        fit_profile(np.empty(0, np.int64))
+
+
+def test_real_like_generator_is_registered_and_deterministic():
+    a = make_trace("real_like", 800, 12_000, seed=3, source="zipf", alpha=0.9)
+    b = make_trace("real_like", 800, 12_000, seed=3, source="zipf", alpha=0.9)
+    c = make_trace("real_like", 800, 12_000, seed=4, source="zipf", alpha=0.9)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert a.dtype == np.int64 and len(a) == 12_000
+    assert a.min() >= 0 and a.max() < 800

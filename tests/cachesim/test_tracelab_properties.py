@@ -1,0 +1,144 @@
+"""Hypothesis property tests for the tracelab loaders and synthesizer.
+
+Real-or-stub (PR-2 conftest pattern): runs in tier-1 either way.  The
+invariants are exact, not statistical:
+
+* **round-trip** — write ids in any on-disk format, load them back,
+  get the identical stream;
+* **chunking invariance** — any ``chunk_size`` split of a loader or of
+  the synthesizer concatenates to the one-shot result;
+* **catalog density** — remapped ids are exactly ``0..N-1``, assigned in
+  first-seen order, independent of the chunking;
+* **determinism** — loaders and synthesizer are pure functions of
+  (bytes,) and (profile, catalog, seed) respectively.
+"""
+
+import os
+import tempfile
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cachesim.tracelab import (
+    CatalogRemap,
+    fit_profile,
+    load_trace,
+    open_trace,
+    synthesize,
+    synthesize_chunks,
+    write_trace,
+)
+from repro.cachesim.traces import make_trace
+
+FORMATS = ("csv", "tsv", "cdn", "bin32", "bin64")
+_EXT = {"csv": ".csv", "tsv": ".tsv", "cdn": ".log",
+        "bin32": ".u32", "bin64": ".u64"}
+
+
+def _random_ids(rng: np.random.Generator, n: int, sparse: bool) -> np.ndarray:
+    hi = (1 << 62) if sparse else 10_000
+    return rng.integers(0, hi, size=n, dtype=np.int64)
+
+
+@given(
+    fmt=st.sampled_from(FORMATS),
+    n=st.integers(1, 400),
+    sparse=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+    chunk_size=st.integers(1, 500),
+)
+@settings(max_examples=25, deadline=None)
+def test_write_load_round_trip(fmt, n, sparse, seed, chunk_size):
+    rng = np.random.default_rng(seed)
+    ids = _random_ids(rng, n, sparse and fmt != "bin32")
+    if fmt == "bin32":
+        ids %= 1 << 32
+    with tempfile.TemporaryDirectory() as d:
+        path = write_trace(os.path.join(d, "t" + _EXT[fmt]), ids, fmt)
+        got = load_trace(path, fmt)
+        np.testing.assert_array_equal(got, ids)
+        chunks = list(open_trace(path, fmt, chunk_size=chunk_size))
+        np.testing.assert_array_equal(np.concatenate(chunks), ids)
+        assert all(len(c) == chunk_size for c in chunks[:-1])
+
+
+@given(
+    n=st.integers(1, 600),
+    n_distinct=st.integers(1, 40),
+    sparse=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+    chunk_size=st.integers(1, 200),
+)
+@settings(max_examples=25, deadline=None)
+def test_catalog_remap_density_first_seen(
+    n, n_distinct, sparse, seed, chunk_size
+):
+    rng = np.random.default_rng(seed)
+    pool = np.unique(_random_ids(rng, n_distinct, sparse))
+    raw = pool[rng.integers(0, len(pool), size=n)]
+
+    cr = CatalogRemap()
+    parts = [
+        cr.apply(raw[i : i + chunk_size]) for i in range(0, n, chunk_size)
+    ]
+    out = np.concatenate(parts)
+    # dense: ids are exactly 0..N-1 over the distinct set
+    uniq = np.unique(out)
+    np.testing.assert_array_equal(uniq, np.arange(len(cr)))
+    # first-seen monotone: the running max over first occurrences is the
+    # sequence 0,1,2,... (each *new* id is the next integer)
+    firsts = out[np.sort(np.unique(out, return_index=True)[1])]
+    np.testing.assert_array_equal(firsts, np.arange(len(cr)))
+    # chunking never changes the mapping
+    np.testing.assert_array_equal(out, CatalogRemap().apply(raw))
+    # and the mapping inverts through raw_ids
+    np.testing.assert_array_equal(cr.raw_ids[out], raw)
+
+
+@given(
+    src=st.sampled_from(("zipf", "bursty", "shifting_zipf", "scan_mix")),
+    n=st.integers(8, 500),
+    t=st.integers(1, 4000),
+    seed=st.integers(0, 2**31 - 1),
+    chunk_size=st.integers(1, 5000),
+)
+@settings(max_examples=20, deadline=None)
+def test_synthesizer_chunking_invariance_and_determinism(
+    src, n, t, seed, chunk_size
+):
+    source = make_trace(src, n, max(t, 256), seed=seed % 1000)
+    prof = fit_profile(source)
+    one = synthesize(prof, t, catalog=n, seed=seed)
+    np.testing.assert_array_equal(
+        one, synthesize(prof, t, catalog=n, seed=seed)
+    )
+    chunks = list(
+        synthesize_chunks(prof, t, catalog=n, seed=seed,
+                          chunk_size=chunk_size)
+    )
+    got = (
+        np.concatenate(chunks) if chunks else np.empty(0, np.int64)
+    )
+    np.testing.assert_array_equal(got, one)
+    assert all(len(c) == chunk_size for c in chunks[:-1])
+    # range/dtype/length invariants (the trace-generator contract)
+    assert one.dtype == np.int64 and len(one) == t
+    if t:
+        assert one.min() >= 0 and one.max() < n
+
+
+@given(
+    n=st.integers(8, 300),
+    t=st.integers(64, 3000),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_synthesizer_prefix_stability(n, t, seed):
+    """A shorter synthesis is a prefix of a longer one (same seed): the
+    stream is block-deterministic, so T only truncates."""
+    source = make_trace("zipf", n, 2000, seed=seed % 997)
+    prof = fit_profile(source)
+    long = synthesize(prof, t, catalog=n, seed=seed)
+    short = synthesize(prof, t // 2, catalog=n, seed=seed)
+    np.testing.assert_array_equal(short, long[: t // 2])
