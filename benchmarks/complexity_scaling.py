@@ -4,10 +4,20 @@ Wall-clock per request vs catalog size for OGB (lazy, O(log N)) against
 OGB_cl (eager projection, Theta(N log N) per request at B=1) and the O(1)/
 O(log C) classics.  OGB's curve must stay ~flat in N while OGB_cl blows up —
 the reason prior no-regret evaluations stopped at 10^4 items (paper Fig. 1).
+
+The device section replays the same claim through the compiled engines:
+``ogb`` (dense per-chunk projection, O(N) per chunk), ``ogb_tree`` (the lazy
+bucketized projection over prefix trees, O(B log V) per chunk — per-request
+cost independent of N) and the prefix-tree ``lru`` automaton.  Per-engine
+power-law exponents ``us/req ~ N^p`` are fitted in log-log space and written
+to the tracked ``BENCH_complexity.json``; the lazy tree engine must stay
+sublinear (p << 1) while the dense scan grows toward linear.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -21,6 +31,27 @@ from repro.core.policies import LRU
 
 from .common import csv_row, save_json, scale
 
+BENCH_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_complexity.json",
+)
+
+#: device engines swept over N (name -> policy_def kwargs)
+DEVICE_ENGINES = {
+    "ogb_scan": dict(kind="ogb"),
+    "ogb_tree": dict(kind="ogb_tree"),
+    "lru_tree": dict(kind="lru"),
+}
+
+
+def fit_exponent(sizes, us):
+    """Least-squares slope of log(us) vs log(N): us ~ N^p.  p ~ 0 is flat
+    (per-request cost independent of the catalog), p ~ 1 is linear."""
+    x = np.log(np.asarray(sizes, np.float64))
+    y = np.log(np.maximum(np.asarray(us, np.float64), 1e-9))
+    p, _ = np.polyfit(x, y, 1)
+    return float(p)
+
 
 def main() -> dict:
     sizes = scale([10_000, 100_000, 1_000_000], [10_000, 100_000, 1_000_000, 10_000_000])
@@ -28,6 +59,7 @@ def main() -> dict:
     T_cl = scale(300, 1000)  # OGB_cl is too slow for full T at large N
     B_scan = 1000  # the batched data-plane operating point
     out = {}
+    device = {name: {} for name in DEVICE_ENGINES}
     for N in sizes:
         C = N // 20
         trace = zipf(N, T, alpha=0.8, seed=13)
@@ -46,12 +78,16 @@ def main() -> dict:
             csv_row(f"complexity/N={N}/{name}", us, f"C={C}")
         # the scan-compiled batched data plane (B=1000); api.run compiles
         # ahead of time, so the measured wall is the steady-state replay
-        m = api_run(
-            policy_def("ogb"), trace, N, C, window=B_scan, seed=13,
-            track_opt=False,
-        )
-        row["OGB_scan_B1000"] = m.us_per_request
-        csv_row(f"complexity/N={N}/OGB_scan_B1000", m.us_per_request, f"C={C}")
+        for name, kw in DEVICE_ENGINES.items():
+            kw = dict(kw)
+            pd = policy_def(kw.pop("kind"), **kw)
+            m = api_run(
+                pd, trace, N, C, window=B_scan, seed=13, track_opt=False,
+                keep_carry=False,
+            )
+            device[name][N] = m.us_per_request
+            row[name] = m.us_per_request
+            csv_row(f"complexity/N={N}/{name}", m.us_per_request, f"C={C}")
         out[N] = row
         print(
             f"N={N:>10,}: "
@@ -66,7 +102,39 @@ def main() -> dict:
           f"(OGB_cl: {growth_cl:.1f}x)")
     assert growth_ogb < 5.0
     assert growth_cl > 10.0
+
+    # device engines: fitted power-law exponents (slope vs linear p=1)
+    exponents = {
+        name: fit_exponent(ns, [vals[N] for N in ns])
+        for name, vals in device.items()
+    }
+    for name, p in exponents.items():
+        print(f"device {name}: us/req ~ N^{p:.3f} "
+              f"({'sublinear' if p < 0.5 else 'NOT sublinear'})")
+    # the tentpole claim: the lazy tree projection's per-request cost must
+    # stay far from linear in the catalog size
+    assert exponents["ogb_tree"] < 0.5, exponents
+    assert exponents["lru_tree"] < 0.5, exponents
+
+    bench = {
+        "sizes": [int(n) for n in ns],
+        "T": T,
+        "window": B_scan,
+        "device_us_per_request": {
+            name: {str(N): vals[N] for N in ns}
+            for name, vals in device.items()
+        },
+        "power_law_exponent": exponents,
+        "slope_ratio_vs_linear": {k: v / 1.0 for k, v in exponents.items()},
+        "host_us_per_request": {
+            str(N): {k: v for k, v in row.items() if k not in DEVICE_ENGINES}
+            for N, row in out.items()
+        },
+    }
     save_json("complexity_scaling", out)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(bench, f, indent=2, default=float)
+    print(f"wrote {BENCH_JSON}")
     return out
 
 

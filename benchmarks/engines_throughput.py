@@ -55,7 +55,7 @@ def main() -> dict:
         "engines": {},
     }
 
-    for kind in ("lru", "fifo", "lfu", "ftpl", "omd", "ogb"):
+    for kind in ("lru", "fifo", "lfu", "ftpl", "omd", "ogb", "ogb_tree"):
         pd = policy_def(kind)
         window = B if pd.fractional else max(T // 100, 1)
         r = run(pd, trace, N, C, window=window, horizon=T, track_opt=False)
@@ -75,6 +75,9 @@ def main() -> dict:
         host.us_per_request / out["engines"]["LRU"]["us_per_request"]
     )
     csv_row("engines/host_LRU", host.us_per_request, f"T={t_host}")
+    # the prefix-tree LRU engine must beat the host loop outright — a
+    # regression below 1x means the O(log) reuse-distance path broke
+    assert out["lru_speedup_vs_host"] >= 1.0, out["lru_speedup_vs_host"]
 
     # vmapped sweep amortization: a 6-combo LRU grid in one dispatch
     sweep_t = min(T, 200_000)

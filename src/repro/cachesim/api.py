@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.cachesim import engines as _engines
+from repro.cachesim import tree_engines as _tree_engines
 from repro.cachesim.replay import (
     _make_ogb_step,
     opt_hits_by_combo,
@@ -411,7 +412,7 @@ def _sampling_init(seed: int, catalog_size: int, sample: str):
 def _chunk_u(sample: str, u_key: jax.Array, t: jax.Array) -> jax.Array:
     """Per-chunk Madow offset, derived from the carried key + chunk counter
     (counter-mode so streamed/resumed runs draw the same sequence)."""
-    if sample != "madow":
+    if sample not in ("madow", "madow_tree"):
         return jnp.zeros((), jnp.float32)
     k = jax.random.fold_in(jax.random.wrap_key_data(u_key), t)
     return jax.random.uniform(k, (), jnp.float32)
@@ -446,10 +447,12 @@ def _ogb_def(
              n_slots=None):
         if eta is None:
             raise ValueError("ogb init needs eta (run() resolves eta=None)")
-        if sample == "madow" and int(madow_capacity) != int(capacity):
+        if sample in ("madow", "madow_tree") and int(madow_capacity) != int(
+            capacity
+        ):
             raise ValueError(
                 f"madow needs a static capacity: policy_def('ogb', "
-                f"sample='madow', madow_capacity={capacity}) "
+                f"sample={sample!r}, madow_capacity={capacity}) "
                 f"(got {madow_capacity})"
             )
         p, u_key = _sampling_init(seed, catalog_size, sample)
@@ -496,10 +499,12 @@ def _omd_def(
              n_slots=None):
         if eta is None:
             raise ValueError("omd init needs eta (run() resolves eta=None)")
-        if sample == "madow" and int(madow_capacity) != int(capacity):
+        if sample in ("madow", "madow_tree") and int(madow_capacity) != int(
+            capacity
+        ):
             raise ValueError(
                 f"madow needs a static capacity: policy_def('omd', "
-                f"sample='madow', madow_capacity={capacity}) "
+                f"sample={sample!r}, madow_capacity={capacity}) "
                 f"(got {madow_capacity})"
             )
         p, u_key = _sampling_init(seed, catalog_size, sample)
@@ -535,9 +540,116 @@ def _omd_def(
     )
 
 
-def _automaton_def(kind: str, zeta: Optional[float] = None) -> PolicyDef:
-    raw = _engines._STEPS[kind]
+def _ogb_tree_def(
+    sample: str = "poisson",
+    buckets: int = _tree_engines.OGB_TREE_BUCKETS,
+    radix: int = _tree_engines.OGB_TREE_RADIX,
+    iters: int = _tree_engines.OGB_TREE_ITERS,
+    batch_hint: int = 4096,
+) -> PolicyDef:
+    """Lazy bucketized OGB: O(B log V) per chunk instead of O(N).
+
+    Same gradient step and hit accounting as ``ogb``; the per-chunk
+    capped-simplex projection is replaced by a scalar threshold solve over
+    a V-bucket histogram of the accumulated values, so per-chunk work no
+    longer scales with the catalog.  Hit ratios track the dense ``ogb``
+    within the histogram quantization (see the differential test); use
+    ``ogb`` when bit-exact projections matter.  ``sample`` is limited to
+    ``"poisson"``/``"none"`` — Madow needs the full fractional vector.
+    """
+    if sample not in ("poisson", "none"):
+        raise ValueError(
+            f"ogb_tree supports sample='poisson'|'none' (got {sample!r}); "
+            "use policy_def('ogb', sample='madow_tree', ...) for Madow"
+        )
+
+    def init(catalog_size, capacity, *, seed=0, eta=None, horizon=None,
+             n_slots=None):
+        if eta is None:
+            raise ValueError(
+                "ogb_tree init needs eta (run() resolves eta=None)"
+            )
+        return _tree_engines.init_ogb_tree_carry(
+            catalog_size,
+            capacity,
+            eta=eta,
+            seed=seed,
+            sample=sample,
+            buckets=buckets,
+            radix=radix,
+            batch_hint=batch_hint,
+        )
+
+    def step(carry, ids):
+        chunk = _tree_engines.make_ogb_tree_chunk(
+            carry.y.shape[0], buckets, radix, sample, iters
+        )
+        carry, (reward, hits, dtau, occ) = chunk(carry, ids)
+        return carry, StepOut(reward, hits, dtau, occ)
+
+    return PolicyDef(
+        kind="ogb_tree",
+        name="OGB_tree",
+        init=init,
+        step=step,
+        fractional=True,
+        default_eta=lambda N, C, T, W: theoretical_eta(C, N, T, 1),
+    )
+
+
+def _automaton_def(
+    kind: str,
+    zeta: Optional[float] = None,
+    impl: Optional[str] = None,
+) -> PolicyDef:
+    """Discrete automaton PolicyDef.
+
+    ``impl`` selects the engine implementation: ``"tree"`` (the default for
+    lru/lfu/ftpl) runs the O(log) prefix-tree engines of
+    :mod:`repro.cachesim.tree_engines`; ``"dense"`` is the O(C)-per-request
+    slot automaton — kept as an escape hatch and as the differential-test
+    oracle.  Both produce bit-identical hit sequences; only the carry
+    layout differs.  FIFO has no tree form (insertion order is not a reuse
+    distance) and always runs dense.
+    """
+    if impl is None:
+        impl = "tree" if kind in _tree_engines.TREE_ENGINE_KINDS else "dense"
     def_zeta = zeta
+
+    if impl == "tree":
+        if kind not in _tree_engines.TREE_ENGINE_KINDS:
+            raise ValueError(f"no tree engine for kind {kind!r}")
+
+        def init(catalog_size, capacity, *, seed=0, eta=None, horizon=None,
+                 n_slots=None, zeta=None, ring=None):
+            return _tree_engines.init_tree_engine_carry(
+                kind,
+                catalog_size,
+                capacity,
+                n_slots=n_slots,
+                seed=seed,
+                zeta=zeta if zeta is not None else def_zeta,
+                horizon=horizon,
+                ring=ring,
+            )
+
+        def step(carry, ids):
+            # static geometry comes from the (traced) carry's shapes, so
+            # one PolicyDef serves every catalog/window combination
+            chunk = _tree_engines.make_tree_chunk(kind, carry)
+            carry, (hits, occ) = chunk(carry, ids)
+            return carry, StepOut(
+                hits.astype(jnp.float32),
+                hits,
+                jnp.zeros((), jnp.float32),
+                occ.astype(jnp.float32),
+            )
+
+        return PolicyDef(kind=kind, name=kind.upper(), init=init, step=step)
+
+    if impl != "dense":
+        raise ValueError(f"unknown automaton impl {impl!r}")
+    raw = _engines._STEPS[kind]
 
     def init(catalog_size, capacity, *, seed=0, eta=None, horizon=None,
              n_slots=None, zeta=None):
@@ -615,6 +727,7 @@ def _ogb_grad_def(iters: int = DEFAULT_BISECT_ITERS) -> PolicyDef:
 
 
 register_policy_def("ogb", _ogb_def)
+register_policy_def("ogb_tree", _ogb_tree_def)
 register_policy_def("omd", _omd_def)
 register_policy_def("ogb_grad", _ogb_grad_def)
 for _kind in _engines.ENGINE_KINDS:

@@ -304,9 +304,9 @@ def _make_omd_step(
     """The per-chunk OMD update, with *traced* eta and capacity — the
     mirror-descent counterpart of :func:`repro.cachesim.replay._make_ogb_step`
     (same ``step(eta, p, cap, carry, xs)`` contract)."""
-    if sample not in ("poisson", "madow", "none"):
+    if sample not in ("poisson", "madow", "madow_tree", "none"):
         raise ValueError(f"unknown sample mode {sample!r}")
-    if sample == "madow" and madow_capacity is None:
+    if sample in ("madow", "madow_tree") and madow_capacity is None:
         raise ValueError("madow sampling needs a static capacity")
 
     def step(eta, p, cap, carry, xs):

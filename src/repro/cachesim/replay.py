@@ -68,26 +68,22 @@ def sampling_keys(seed: int, catalog_size: int, sample: str) -> tuple:
     return p, k_u
 
 
-def sampling_arrays(
-    seed: int, catalog_size: int, m: int, sample: str
-) -> tuple:
-    """Seed-derived (p, us): permanent random numbers for Poisson sampling
-    and a per-chunk Madow offset vector (size-0 placeholders for the unused
-    mode) — the legacy vector form consumed by :func:`make_replay_fn`."""
-    p, k_u = sampling_keys(seed, catalog_size, sample)
-    us = (
-        jax.random.uniform(k_u, (m,), jnp.float32)
-        if sample == "madow"
-        else jnp.zeros((0,), jnp.float32)
-    )
-    return p, us
+#: sampling modes that draw a per-chunk Madow offset u from the carried key
+MADOW_SAMPLES = ("madow", "madow_tree")
 
 
 def sample_chunk_metrics(sample: str, capacity, f, ids, p, u):
     """(reward, hits, occupancy) for one request chunk at the pre-update
     state ``f`` (OCO order).  The one definition of the Poisson / Madow /
     fractional hit-accounting conventions, shared by the OGB and OMD scan
-    engines so they cannot drift."""
+    engines so they cannot drift.
+
+    ``madow_tree`` is the O(C log N) form of ``madow``: the same systematic
+    sample drawn by prefix-tree descent
+    (:func:`repro.kernels.prefix_tree.madow_sample_tree`) instead of an
+    O(N) cumsum + mask — an equally valid draw from the same marginals, but
+    not the bit-identical sample set (float32 tree sums associate
+    differently), so the committed goldens stay on ``madow``."""
     fi = f[ids]
     reward = jnp.sum(fi)
     if sample == "poisson":
@@ -99,6 +95,14 @@ def sample_chunk_metrics(sample: str, capacity, f, ids, p, u):
         cached = madow_sample_jax(f, u, capacity)
         hits = jnp.sum(cached[ids].astype(jnp.int32))
         occ = jnp.sum(cached.astype(jnp.float32))
+    elif sample == "madow_tree":
+        from repro.kernels.prefix_tree import madow_sample_tree
+
+        sel = madow_sample_tree(f, u, capacity)  # (C,) ascending leaf ids
+        pos = jnp.searchsorted(sel, ids)
+        cached = sel[jnp.minimum(pos, capacity - 1)] == ids
+        hits = jnp.sum(cached.astype(jnp.int32))
+        occ = jnp.float32(capacity)
     else:
         hits = jnp.zeros((), jnp.int32)
         occ = jnp.sum(f)
@@ -151,11 +155,11 @@ def _make_ogb_step(
     scan); ``madow_capacity`` must be the static C when ``sample == "madow"``
     (Madow needs a static sample count).
     """
-    if sample not in ("poisson", "madow", "none"):
+    if sample not in ("poisson", "madow", "madow_tree", "none"):
         raise ValueError(f"unknown sample mode {sample!r}")
     if projection not in ("warm", "bisect"):
         raise ValueError(f"unknown projection mode {projection!r}")
-    if sample == "madow" and madow_capacity is None:
+    if sample in MADOW_SAMPLES and madow_capacity is None:
         raise ValueError("madow sampling needs a static capacity")
 
     def step(eta, p, cap, carry, xs):

@@ -1,0 +1,780 @@
+"""Tree-backed device engines: the O(log N) automata of the paper.
+
+The dense automata in :mod:`repro.cachesim.engines` pay O(C) vector work
+per request (slot-wide compares and argmins) and the fractional replay pays
+O(N) per chunk.  This module re-implements the eviction machinery on the
+packed radix trees of :mod:`repro.kernels.prefix_tree`, turning the
+per-request cost into O(R log_R ·) scatter/gather paths while staying
+**bit-exact** against the dense steps (the differential tests in
+``tests/cachesim/test_tree_policies.py`` compare hit sequences request by
+request).
+
+Three engines:
+
+* **tree-LRU** — chunk-batched *reuse distance*: a request hits iff the
+  number of distinct items since its previous occurrence is at most C-1,
+  which is exactly LRU.  Marks (last occurrences) live on a ring of
+  positions with a radix-16 count tree over them; a chunk of W requests is
+  resolved with two batched prefix queries plus a (W, W) in-chunk dominance
+  term, and the tree moves each distinct item's mark once per chunk.  When
+  the ring fills, a rank-compaction keeps only the newest ``capacity``
+  marks — exact, because a reuse window reaching past those marks already
+  contains >= capacity distinct items (a certain miss either way), and
+  dropped items re-enter as first-seen misses, which they would be.
+* **tree-LFU / tree-FTPL** — per-request automata whose victim search is a
+  lexicographic (hi, lo) min-tree over slots: (frequency, tick) for LFU,
+  (sortable perturbed score, item id) for FTPL — the same eviction keys and
+  tie-breaks as the dense steps, so hit sequences agree bit for bit.  All
+  writes are *delayed* one request (applied at the start of the next step)
+  so no gather reads a just-scattered array — the anti-dependency would
+  otherwise force a full-array copy per request.
+
+Per-chunk steps keep their pending writes in the **inner** scan carry and
+flush them before returning, so the outer carry is window-independent —
+the streaming/resume contract of :mod:`repro.cachesim.api` (two chunked
+runs replay one full run bit for bit) holds for any window split.
+
+FIFO stays dense: its eviction order is insertion time, which reuse
+distances cannot express, and its O(C) step is already cheap.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ftpl import ftpl_initial_top_c, ftpl_noise, theoretical_zeta
+from repro.kernels.prefix_tree import ops as pt
+
+_I32_MAX = np.int32(np.iinfo(np.int32).max)
+
+#: kinds with a tree-backed implementation (impl="tree" in the API layer)
+TREE_ENGINE_KINDS = ("lru", "lfu", "ftpl")
+
+#: radix of the position tree (LRU ring) — 16 lanes keep the sibling
+#: gathers one vector register wide while the ring tree stays 4 levels deep
+RING_RADIX = 16
+#: radix of the slot min-trees (LFU/FTPL) — 64-wide groups make catalogs of
+#: thousands of slots two levels deep
+SLOT_RADIX = 64
+#: sub-chunk width cap for the reuse-distance engine: the (W, W) in-chunk
+#: dominance term is brute-force, and past ~128 it stops being free
+MAX_SUBCHUNK = 128
+
+
+# ---------------------------------------------------------------------------
+# carries
+# ---------------------------------------------------------------------------
+class TreeLRUCarry(NamedTuple):
+    """Reuse-distance LRU state (window-independent; pends live inner-scan)."""
+
+    tree: jax.Array  # (TOT,) int32 packed radix-16 mark-count tree
+    last: jax.Array  # (N+1,) int32 item -> ring position of last occurrence
+    pos: jax.Array  # () int32 next free ring position
+    nseen: jax.Array  # () int32 distinct items seen (occupancy = min(, cap))
+    cap: jax.Array  # () int32 capacity (traced: sweeps stack it)
+
+
+class TreeLFUCarry(NamedTuple):
+    imap: jax.Array  # (N+1,) int32 item -> slot (-1 out; N is scratch)
+    counts: jax.Array  # (N,) int32 perfect-LFU counters
+    slots: jax.Array  # (K,) int32 slot -> item (-1 empty, -2 inactive)
+    tree_hi: jax.Array  # (TOT,) int32 min-tree over slot frequencies
+    tree_lo: jax.Array  # (TOT,) int32 min-tree over slot ticks
+    t: jax.Array  # () int32
+
+
+class TreeFTPLCarry(NamedTuple):
+    imap: jax.Array  # (N+1,) int32 item -> slot (-1 out; N is scratch)
+    counts: jax.Array  # (N,) int32 request counters
+    noise: jax.Array  # (N,) float32 one-shot perturbation (constant)
+    slots: jax.Array  # (K,) int32 slot -> item (-2 inactive)
+    tree_hi: jax.Array  # (TOT,) int32 min-tree over sortable scores
+    tree_lo: jax.Array  # (TOT,) int32 min-tree over slot item ids
+
+
+# ---------------------------------------------------------------------------
+# geometry helpers
+# ---------------------------------------------------------------------------
+def ring_size(n_slots: int) -> int:
+    """Ring length: power of two with >= 4x slack over the kept-mark count
+    (compaction keeps at most ``capacity`` marks).  The floor is generous —
+    each compaction pays an argsort over the catalog, so headroom buys
+    throughput directly (8192 vs 65536 measured 2x on the bench trace) and
+    the tree costs only ~level-sum(m) int32s."""
+    m = 65536
+    while m < 4 * int(n_slots):
+        m *= 2
+    return m
+
+
+def _pick_subchunk(window: int) -> int:
+    """Largest divisor of ``window`` that is <= MAX_SUBCHUNK, preferring
+    16-aligned widths (aligned sub-chunks take the cheap grouped-insert
+    path: ~2x fewer scatter elements per request)."""
+    best, best_aligned = 1, 1
+    for d in range(1, min(window, MAX_SUBCHUNK) + 1):
+        if window % d == 0:
+            best = d
+            if d % RING_RADIX == 0:
+                best_aligned = d
+    return best_aligned if best_aligned > 1 else best
+
+
+# ---------------------------------------------------------------------------
+# tree-LRU: chunk-batched reuse distance
+# ---------------------------------------------------------------------------
+def init_tree_lru_carry(catalog_size: int, capacity: int,
+                        n_slots: Optional[int] = None,
+                        ring: Optional[int] = None) -> TreeLRUCarry:
+    k = int(n_slots) if n_slots else int(capacity)
+    m = int(ring) if ring else ring_size(k)
+    if m & (m - 1) or m < 4 * k:
+        raise ValueError(
+            f"ring must be a power of two >= 4 * n_slots, got {m} for {k}"
+        )
+    return TreeLRUCarry(
+        tree=jnp.zeros(pt.tree_storage(m, RING_RADIX), jnp.int32),
+        last=jnp.full(catalog_size + 1, -1, jnp.int32),
+        pos=jnp.zeros((), jnp.int32),
+        nseen=jnp.zeros((), jnp.int32),
+        cap=jnp.int32(capacity),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def make_lru_tree_chunk(catalog_size: int, m: int):
+    """Chunk step ``(carry, ids(window,)) -> (carry, (hits, occ))`` for the
+    reuse-distance engine; the sub-chunk width W is derived from the traced
+    chunk shape, so one factory serves every window."""
+    radix = RING_RADIX
+    sh = radix.bit_length() - 1
+    offs = pt.tree_offsets(m, radix)
+    sizes = pt.tree_sizes(m, radix)
+    nlev = len(offs)
+
+    def compact(tree, last, pos, cap):
+        # rank-remap marks to [0, kept); drop all but the newest `cap`
+        # marks (exact: a reuse window reaching past them holds >= cap
+        # marks, a certain miss, and dropped items re-enter as first-seen)
+        nmarks = jnp.sum(last >= 0, dtype=jnp.int32)
+        kept = jnp.minimum(nmarks, cap)
+        key = jnp.where(last >= 0, last, _I32_MAX)
+        order = jnp.argsort(key)
+        ranks = jnp.zeros_like(key).at[order].set(
+            jnp.arange(key.shape[0], dtype=jnp.int32)
+        )
+        newrank = ranks - (nmarks - kept)
+        newlast = jnp.where((last >= 0) & (newrank >= 0), newrank, -1)
+        leaf = (jnp.arange(m, dtype=jnp.int32) < kept).astype(jnp.int32)
+        tree = pt.tree_build(leaf, radix)
+        npos = (kept + radix - 1) & ~(radix - 1)  # 16-aligned restart
+        return tree, newlast, npos
+
+    def chunk(carry, ids):
+        window = ids.shape[0]
+        # compaction runs (at most) once per *chunk*, not per sub-chunk:
+        # after it, pos <= aligned(cap) <= m/4 + 16, so a whole window of
+        # inserts fits.  Keeping the cond out of the inner scan matters
+        # under vmap (sweeps), where a batched cond executes both branches
+        # — per sub-chunk that would pay the argsort every step.
+        if window > 3 * (m // 4) - RING_RADIX:
+            raise ValueError(
+                f"window {window} too large for ring {m}; pass a larger "
+                f"ring= to init (need window <= 3*ring/4 - {RING_RADIX})"
+            )
+        w = _pick_subchunk(window)
+        aligned = w % radix == 0
+        if aligned:
+            npend = w * nlev + w + (nlev - 1) * (w // radix)
+        else:
+            npend = w * nlev * 2
+        eye = jnp.eye(w, dtype=bool)
+        lanes = jnp.arange(w, dtype=jnp.int32)
+
+        def substep(st, sub_ids):
+            tree, last, pos, nseen, cap, pn, pd, pli, plv = st
+            # delayed writes: apply the previous sub-chunk's tree deltas
+            # and mark moves before reading anything
+            tree = tree.at[pn].add(pd)
+            last = last.at[pli].max(plv)
+            kpos = pos + lanes
+            lastg = last[sub_ids]
+            eq = sub_ids[None, :] == sub_ids[:, None]
+            lower = kpos[None, :] < kpos[:, None]
+            prev_in = jnp.max(jnp.where(eq & lower, kpos[None, :], -1), axis=1)
+            prevp = jnp.where(prev_in >= 0, prev_in, lastg)
+            islast = ~jnp.any(eq & ~lower & ~eye, axis=1)
+            # d(i) = tree marks in (prev(i), chunk start) + in-chunk firsts
+            # in (prev(i), i) — the dominance term, brute (W, W)
+            base = pt.tree_prefix(
+                tree, m, radix, jnp.full((1,), pos - 1, jnp.int32)
+            )[0]
+            dpre = base - pt.tree_prefix(
+                tree, m, radix, jnp.minimum(prevp, pos - 1)
+            )
+            dom = (
+                (prevp[None, :] <= prevp[:, None])
+                & (kpos[None, :] > prevp[:, None])
+                & lower
+            )
+            d = dpre + jnp.sum(dom, axis=1, dtype=jnp.int32)
+            hit = (prevp >= 0) & (d <= cap - 1)
+            nseen = nseen + jnp.sum(prevp < 0, dtype=jnp.int32)
+
+            # plan next sub-chunk's writes: remove pre-chunk marks that
+            # moved, insert marks at last in-chunk occurrences
+            rm = jnp.where((lastg >= 0) & (prev_in < 0), lastg, -1)
+            rm_nodes, rm_deltas, node = [], [], rm
+            for l in range(nlev):
+                ok = rm >= 0
+                rm_nodes.append(jnp.where(ok, offs[l] + node, 0))
+                rm_deltas.append(jnp.where(ok, jnp.int32(-1), 0))
+                node = node >> sh
+            ins = islast.astype(jnp.int32)
+            if aligned:
+                # leaf groups are complete (pos and W both 16-aligned):
+                # exact level-1 deltas via reshape; higher levels scatter
+                # the same (W/16,) deltas at ancestor nodes (duplicate
+                # indices accumulate across group boundaries)
+                g1 = ins.reshape(-1, radix).sum(1, dtype=jnp.int32)
+                gids = (pos >> sh) + jnp.arange(g1.shape[0], dtype=jnp.int32)
+                node = gids
+                ins_nodes, ins_deltas = [], []
+                for l in range(1, nlev):
+                    ins_nodes.append(offs[l] + node)
+                    ins_deltas.append(g1)
+                    node = node >> sh
+                pn = jnp.concatenate([*rm_nodes, kpos] + ins_nodes)
+                pd = jnp.concatenate([*rm_deltas, ins] + ins_deltas)
+            else:
+                node = kpos
+                ins_nodes, ins_deltas = [], []
+                for l in range(nlev):
+                    ins_nodes.append(offs[l] + node)
+                    ins_deltas.append(ins)
+                    node = node >> sh
+                pn = jnp.concatenate(rm_nodes + ins_nodes)
+                pd = jnp.concatenate(rm_deltas + ins_deltas)
+            pli, plv = sub_ids, kpos
+            st = (tree, last, pos + w, nseen, cap, pn, pd, pli, plv)
+            return st, hit
+
+        tree, last, pos = jax.lax.cond(
+            carry.pos + window > m,
+            lambda a: compact(a[0], a[1], a[2], carry.cap),
+            lambda a: a,
+            (carry.tree, carry.last, carry.pos),
+        )
+        # pend arrays are inner-scan state only, flushed before returning,
+        # so the outer carry does not depend on the window split
+        st = (
+            tree, last, pos, carry.nseen, carry.cap,
+            jnp.zeros(npend, jnp.int32), jnp.zeros(npend, jnp.int32),
+            jnp.zeros(w, jnp.int32), jnp.full(w, -1, jnp.int32),
+        )
+        st, hits = jax.lax.scan(substep, st, ids.reshape(-1, w))
+        tree, last, pos, nseen, cap, pn, pd, pli, plv = st
+        tree = tree.at[pn].add(pd)
+        last = last.at[pli].max(plv)
+        out = TreeLRUCarry(tree, last, pos, nseen, cap)
+        nhits = jnp.sum(hits.astype(jnp.int32))
+        return out, (nhits, jnp.minimum(nseen, cap))
+
+    return chunk
+
+
+# ---------------------------------------------------------------------------
+# tree-LFU / tree-FTPL: delayed-write min-pair automata
+# ---------------------------------------------------------------------------
+def _slot_tot(k: int) -> int:
+    return pt.tree_storage(k, SLOT_RADIX)
+
+
+def init_tree_lfu_carry(catalog_size: int, capacity: int,
+                        n_slots: Optional[int] = None) -> TreeLFUCarry:
+    k = int(n_slots) if n_slots else int(capacity)
+    c = int(capacity)
+    hi = np.full(k, _I32_MAX, np.int32)
+    lo = np.full(k, _I32_MAX, np.int32)
+    hi[:c] = -1  # empty slots: freq -1 sorts below any real frequency
+    lo[:c] = -1
+    th, tl = pt.minpair_build(jnp.asarray(hi), jnp.asarray(lo), SLOT_RADIX)
+    slots = np.full(k, -2, np.int32)
+    slots[:c] = -1
+    return TreeLFUCarry(
+        imap=jnp.full(catalog_size + 1, -1, jnp.int32),
+        counts=jnp.zeros(catalog_size, jnp.int32),
+        slots=jnp.asarray(slots),
+        tree_hi=th,
+        tree_lo=tl,
+        t=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_tree_ftpl_carry(catalog_size: int, capacity: int,
+                         n_slots: Optional[int] = None, *, seed: int = 0,
+                         zeta: Optional[float] = None,
+                         horizon: Optional[int] = None) -> TreeFTPLCarry:
+    k = int(n_slots) if n_slots else int(capacity)
+    c = int(capacity)
+    if zeta is None:
+        if horizon is None:
+            raise ValueError("ftpl needs zeta or horizon")
+        zeta = theoretical_zeta(c, catalog_size, horizon)
+    noise = ftpl_noise(catalog_size, zeta, seed=seed)
+    top = ftpl_initial_top_c(noise, c).astype(np.int32)
+    slots = np.full(k, -2, np.int32)
+    slots[:c] = top
+    imap = np.full(catalog_size + 1, -1, np.int32)
+    imap[top] = np.arange(c, dtype=np.int32)
+    hi = np.full(k, _I32_MAX, np.int32)
+    lo = np.full(k, _I32_MAX, np.int32)
+    hi[:c] = np.asarray(
+        pt.sortable_f32(jnp.asarray(noise[top], jnp.float32))
+    )
+    lo[:c] = top
+    th, tl = pt.minpair_build(jnp.asarray(hi), jnp.asarray(lo), SLOT_RADIX)
+    return TreeFTPLCarry(
+        imap=jnp.asarray(imap),
+        counts=jnp.zeros(catalog_size, jnp.int32),
+        noise=jnp.asarray(noise),
+        slots=jnp.asarray(slots),
+        tree_hi=th,
+        tree_lo=tl,
+    )
+
+
+def _wrap_pend_chunk(substep, pack, unpack):
+    """Build ``chunk(carry, ids)`` from a delayed-write per-request substep:
+    pending writes ride the inner carry and are flushed before returning."""
+
+    def chunk(carry, ids):
+        st = pack(carry)
+        st, hits = jax.lax.scan(substep, st, ids)
+        carry = unpack(st)
+        return carry, jnp.sum(hits.astype(jnp.int32))
+
+    return chunk
+
+
+@functools.lru_cache(maxsize=None)
+def make_lfu_tree_chunk(catalog_size: int, k: int):
+    n = catalog_size
+    radix = SLOT_RADIX
+    offs = pt.tree_offsets(k, radix)
+
+    def substep(st, j):
+        (imap, counts, slots, th, tl, t,
+         pci, pcd, pii, piv, psi, psv, pti, pth, ptl) = st
+        counts = counts.at[pci].add(pcd)
+        imap = imap.at[pii].set(piv)
+        slots = slots.at[psi].set(psv)
+        th = th.at[pti].set(pth)
+        tl = tl.at[pti].set(ptl)
+
+        slot = imap[j]
+        hit = slot >= 0
+        f = counts[j] + 1  # the dense step increments before keying
+        root_hi, _ = pt.minpair_root(th, tl, k, radix)
+        victim = pt.minpair_argmin(th, tl, k, radix).astype(jnp.int32)
+        idx = jnp.where(hit, slot, victim)
+        # admission: the newcomer must match the victim's frequency
+        write = jnp.logical_or(hit, f >= root_hi)
+        old = slots[idx]
+        new_hi = jnp.where(write, f, th[idx])  # no-op plan when not writing
+        new_lo = jnp.where(write, t, tl[idx])
+        pti, pth, ptl = pt.minpair_update_plan(th, tl, k, radix, idx,
+                                               new_hi, new_lo)
+        pci, pcd = j, jnp.int32(1)
+        psi = idx
+        psv = jnp.where(write, j, old)
+        mo = jnp.where(write & (old >= 0) & (old != j), old, n)  # n: scratch
+        mj = jnp.where(write, j, n)
+        pii = jnp.stack([mo, mj])
+        piv = jnp.stack([jnp.int32(-1), idx])
+        st = (imap, counts, slots, th, tl, t + 1,
+              pci, pcd, pii, piv, psi, psv, pti, pth, ptl)
+        return st, hit
+
+    def pack(c: TreeLFUCarry):
+        return (
+            c.imap, c.counts, c.slots, c.tree_hi, c.tree_lo, c.t,
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            jnp.full(2, n, jnp.int32), jnp.full(2, -1, jnp.int32),
+            jnp.zeros((), jnp.int32), c.slots[0],
+            jnp.asarray(offs, jnp.int32), c.tree_hi[jnp.asarray(offs)],
+            c.tree_lo[jnp.asarray(offs)],
+        )
+
+    def unpack(st):
+        (imap, counts, slots, th, tl, t,
+         pci, pcd, pii, piv, psi, psv, pti, pth, ptl) = st
+        counts = counts.at[pci].add(pcd)
+        imap = imap.at[pii].set(piv)
+        slots = slots.at[psi].set(psv)
+        th = th.at[pti].set(pth)
+        tl = tl.at[pti].set(ptl)
+        return TreeLFUCarry(imap, counts, slots, th, tl, t)
+
+    return _wrap_pend_chunk(substep, pack, unpack)
+
+
+@functools.lru_cache(maxsize=None)
+def make_ftpl_tree_chunk(catalog_size: int, k: int):
+    n = catalog_size
+    radix = SLOT_RADIX
+    offs = pt.tree_offsets(k, radix)
+
+    def substep(st, j):
+        (imap, counts, noise, slots, th, tl,
+         pci, pcd, pii, piv, psi, psv, pti, pth, ptl) = st
+        counts = counts.at[pci].add(pcd)
+        imap = imap.at[pii].set(piv)
+        slots = slots.at[psi].set(psv)
+        th = th.at[pti].set(pth)
+        tl = tl.at[pti].set(ptl)
+
+        slot = imap[j]
+        hit = slot >= 0
+        s = (counts[j] + 1).astype(jnp.float32) + noise[j]
+        skey = pt.sortable_f32(s)
+        root_hi, _ = pt.minpair_root(th, tl, k, radix)
+        victim = pt.minpair_argmin(th, tl, k, radix).astype(jnp.int32)
+        # strict >, like the dense step; sortable_f32 preserves float order
+        swap = jnp.logical_and(~hit, skey > root_hi)
+        idx = jnp.where(hit, slot, victim)
+        upd = jnp.logical_or(hit, swap)  # a hit refreshes its slot's score
+        old = slots[idx]
+        new_hi = jnp.where(upd, skey, th[idx])
+        new_lo = jnp.where(upd, j, tl[idx])
+        pti, pth, ptl = pt.minpair_update_plan(th, tl, k, radix, idx,
+                                               new_hi, new_lo)
+        pci, pcd = j, jnp.int32(1)
+        psi = idx
+        psv = jnp.where(upd, j, old)
+        mo = jnp.where(swap & (old >= 0), old, n)  # n: scratch index
+        mj = jnp.where(swap, j, n)
+        pii = jnp.stack([mo, mj])
+        piv = jnp.stack([jnp.int32(-1), idx])
+        st = (imap, counts, noise, slots, th, tl,
+              pci, pcd, pii, piv, psi, psv, pti, pth, ptl)
+        return st, hit
+
+    def pack(c: TreeFTPLCarry):
+        return (
+            c.imap, c.counts, c.noise, c.slots, c.tree_hi, c.tree_lo,
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            jnp.full(2, n, jnp.int32), jnp.full(2, -1, jnp.int32),
+            jnp.zeros((), jnp.int32), c.slots[0],
+            jnp.asarray(offs, jnp.int32), c.tree_hi[jnp.asarray(offs)],
+            c.tree_lo[jnp.asarray(offs)],
+        )
+
+    def unpack(st):
+        (imap, counts, noise, slots, th, tl,
+         pci, pcd, pii, piv, psi, psv, pti, pth, ptl) = st
+        counts = counts.at[pci].add(pcd)
+        imap = imap.at[pii].set(piv)
+        slots = slots.at[psi].set(psv)
+        th = th.at[pti].set(pth)
+        tl = tl.at[pti].set(ptl)
+        return TreeFTPLCarry(imap, counts, noise, slots, th, tl)
+
+    return _wrap_pend_chunk(substep, pack, unpack)
+
+
+# ---------------------------------------------------------------------------
+# lazy bucketized OGB: O(B log V) per chunk, independent of the catalog size
+# ---------------------------------------------------------------------------
+#: bucket count of the value histogram the lazy projection solves over
+OGB_TREE_BUCKETS = 65536
+#: radix of the bucket count/sum trees
+OGB_TREE_RADIX = 64
+#: bisection iterations of the per-chunk threshold solve
+OGB_TREE_ITERS = 30
+#: grid headroom factor: the value grid spans ~2*GAIN chunk-updates of rho
+#: growth before a re-anchor pass is needed
+OGB_TREE_GAIN = 8.0
+
+
+class OGBTreeCarry(NamedTuple):
+    """Lazy OGB state: absolute accumulated values + cumulative threshold.
+
+    The dense replay projects the whole catalog every chunk.  Here the
+    state is the *unprojected* accumulation ``y`` with ``f = clip(y - rho,
+    0, 1)`` implicit, and the per-chunk projection becomes a scalar solve
+    of ``mass(rho) = sum_b cnt_b * clip(mean_b - rho, 0, 1) = C`` over a
+    V-bucket histogram of ``y`` kept in packed radix trees — the chunk
+    touches O(B log V) tree nodes, never the catalog.
+    """
+
+    y: jax.Array  # (N,) float32 accumulated values (f = clip(y - rho, 0, 1))
+    rho: jax.Array  # () float32 cumulative projection threshold
+    eta: jax.Array  # () float32
+    cap: jax.Array  # () float32
+    p: jax.Array  # (N,) float32 permanent random numbers, or (0,)
+    w: jax.Array  # () float32 bucket width of the value grid
+    scratch: jax.Array  # (N,) int32 first-occurrence dedup scratch (I32_MAX)
+    ycnt: jax.Array  # (TOT,) float32 bucket-count tree over y
+    ysum: jax.Array  # (TOT,) float32 bucket-sum tree over y
+    dcnt: jax.Array  # (TOT,) float32 bucket-count tree over y - p, or (0,)
+
+
+def _ogb_bucket(x, wv, v: int):
+    """Grid bucket of value ``x``: the grid covers [-1, v*w - 1) so both y
+    (>= 0) and y - p (> -1) share it."""
+    b = jnp.floor((x + 1.0) / wv).astype(jnp.int32)
+    return jnp.clip(b, 0, v - 1)
+
+
+def init_ogb_tree_carry(
+    catalog_size: int,
+    capacity: int,
+    *,
+    eta: float,
+    seed: int = 0,
+    sample: str = "poisson",
+    buckets: int = OGB_TREE_BUCKETS,
+    radix: int = OGB_TREE_RADIX,
+    batch_hint: int = 4096,
+) -> OGBTreeCarry:
+    """Initial carry at the uniform feasible state f = C/N.
+
+    ``batch_hint`` sizes the value grid: headroom for ~2*OGB_TREE_GAIN
+    chunks of worst-case rho growth (eta*B per chunk) between re-anchor
+    passes.  A larger actual window than the hint is still correct — the
+    re-anchor trigger watches the real chunk size — it just re-anchors
+    more often."""
+    from repro.cachesim.replay import sampling_keys
+
+    n, v = int(catalog_size), int(buckets)
+    span = 1.0 + 2.0 * OGB_TREE_GAIN * max(1.0, float(eta) * batch_hint)
+    wv = (span + 1.0) / v
+    y0 = float(capacity) / n
+    p, _ = sampling_keys(seed, n, sample)
+    b0 = int(np.clip(np.floor((y0 + 1.0) / wv), 0, v - 1))
+    cnt_leaf = np.zeros(v, np.float32)
+    cnt_leaf[b0] = n
+    sum_leaf = np.zeros(v, np.float32)
+    sum_leaf[b0] = n * y0
+    ycnt = pt.tree_build(jnp.asarray(cnt_leaf), radix)
+    ysum = pt.tree_build(jnp.asarray(sum_leaf), radix)
+    if sample == "poisson":
+        d0 = y0 - np.asarray(p, np.float64)
+        db = np.clip(np.floor((d0 + 1.0) / wv), 0, v - 1).astype(np.int64)
+        dcnt = pt.tree_build(
+            jnp.asarray(np.bincount(db, minlength=v), jnp.float32), radix
+        )
+    else:
+        dcnt = jnp.zeros((0,), jnp.float32)
+    return OGBTreeCarry(
+        y=jnp.full(n, y0, jnp.float32),
+        rho=jnp.zeros((), jnp.float32),
+        eta=jnp.float32(eta),
+        cap=jnp.float32(capacity),
+        p=p,
+        w=jnp.float32(wv),
+        scratch=jnp.full(n, _I32_MAX, jnp.int32),
+        ycnt=ycnt,
+        ysum=ysum,
+        dcnt=dcnt,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def make_ogb_tree_chunk(catalog_size: int, v: int, radix: int, sample: str,
+                        iters: int = OGB_TREE_ITERS):
+    """Per-chunk lazy OGB step ``(carry, ids) -> (carry, (reward, hits,
+    dtau, occ))``.
+
+    Exactness notes (vs the dense chained projection):
+
+    * the gradient step, hit accounting and reward are exact (B gathers of
+      ``clip(y - rho, 0, 1)``);
+    * the threshold solve uses the bucket mean-clip mass — exact except for
+      the <= 2 buckets straddling ``rho`` and ``rho + 1``, so rho carries
+      an O(bucket width) quantization;
+    * the upper clip ``y <- min(y, 1 + rho)`` is applied to an item only
+      when it is touched, so an item far above the cap decays a little
+      later than in the dense replay (bounded by its last chunk's eta
+      mass).  The differential test bounds the combined drift.
+    """
+    poisson = sample == "poisson"
+
+    def mass_at(ycnt, ysum, wv, total, t):
+        """sum_b cnt_b * clip(mean_b - t, 0, 1) via O(log V) tree reads."""
+        k0 = _ogb_bucket(t, wv, v)
+        k1 = _ogb_bucket(t + 1.0, wv, v)
+        qc = pt.tree_prefix(ycnt, v, radix, jnp.stack([k0, k1]))
+        qs = pt.tree_prefix(ysum, v, radix, jnp.stack([k0, k1]))
+        cb = jnp.stack([ycnt[k0], ycnt[k1]])
+        sb = jnp.stack([ysum[k0], ysum[k1]])
+        # buckets above k1 are entirely past t+1: full mass
+        above = total - qc[1]
+        # buckets strictly between k0 and k1 lie in the linear clip region
+        mid_c = qc[1] - cb[1] - qc[0]
+        mid_s = qs[1] - sb[1] - qs[0]
+        mid = mid_s - t * mid_c
+        # boundary buckets: mean-clip approximation
+        mean = jnp.where(cb > 0, sb / jnp.maximum(cb, 1.0), 0.0)
+        bnd = cb * jnp.clip(mean - t, 0.0, 1.0)
+        return above + mid + bnd[0] + jnp.where(k1 > k0, bnd[1], 0.0)
+
+    def chunk(carry, ids):
+        b = ids.shape[0]
+        y, rho, eta, cap = carry.y, carry.rho, carry.eta, carry.cap
+        p, wv, scratch = carry.p, carry.w, carry.scratch
+        ycnt, ysum, dcnt = carry.ycnt, carry.ysum, carry.dcnt
+        lanes = jnp.arange(b, dtype=jnp.int32)
+
+        # --- metrics at the pre-update state (OCO order), O(B) gathers ---
+        fi = jnp.clip(y[ids] - rho, 0.0, 1.0)
+        reward = jnp.sum(fi)
+        if poisson:
+            hits = jnp.sum((fi >= p[ids]).astype(jnp.int32))
+            # occupancy #{y - p >= rho} from the d-tree: suffix count above
+            # rho's bucket (quantized at the boundary bucket)
+            dtot = pt.tree_total(dcnt, v, radix)
+            occ = dtot - pt.tree_prefix(
+                dcnt, v, radix, _ogb_bucket(rho, wv, v)[None]
+            )[0]
+        else:
+            hits = jnp.zeros((), jnp.int32)
+            occ = cap
+
+        # --- first-occurrence mask (dedup without sorting) ---
+        a = scratch.at[ids].min(lanes)
+        first = a[ids] == lanes
+        scratch = a.at[ids].set(_I32_MAX)  # restore
+
+        # --- gradient step: upper-clip touched items, add eta per request ---
+        yold = y[ids]
+        y = y.at[ids].min(1.0 + rho)
+        y = y.at[ids].add(eta)
+        ynew = y[ids]
+
+        # --- move touched items between buckets (one per distinct item) ---
+        bo = jnp.where(first, _ogb_bucket(yold, wv, v), -1)
+        bn = jnp.where(first, _ogb_bucket(ynew, wv, v), -1)
+        didx = jnp.concatenate([bo, bn])
+        ones = jnp.ones(b, jnp.float32)
+        ycnt = pt.tree_update(ycnt, v, radix, didx,
+                              jnp.concatenate([-ones, ones]))
+        ysum = pt.tree_update(
+            ysum, v, radix, didx,
+            jnp.concatenate([
+                jnp.where(first, -yold, 0.0), jnp.where(first, ynew, 0.0)
+            ]),
+        )
+        if poisson:
+            do = jnp.where(first, _ogb_bucket(yold - p[ids], wv, v), -1)
+            dn = jnp.where(first, _ogb_bucket(ynew - p[ids], wv, v), -1)
+            dcnt = pt.tree_update(dcnt, v, radix,
+                                  jnp.concatenate([do, dn]),
+                                  jnp.concatenate([-ones, ones]))
+
+        # --- scalar threshold solve: bisect on the warm bracket ---
+        total = pt.tree_total(ycnt, v, radix)
+        # rho* - rho <= eta*B (chained-projection bound); the 4w floor keeps
+        # the bracket wider than the mass quantization when eta*B < w
+        hi0 = rho + jnp.maximum(eta * jnp.float32(b), 4.0 * wv)
+
+        def bis(_, lohi):
+            lo, hi = lohi
+            mid = 0.5 * (lo + hi)
+            m = mass_at(ycnt, ysum, wv, total, mid)
+            return jnp.where(m >= cap, mid, lo), jnp.where(m >= cap, hi, mid)
+
+        rho_new, _ = jax.lax.fori_loop(0, iters, bis, (rho, hi0))
+
+        # --- re-anchor when the next chunk could outgrow the value grid ---
+        gridtop = wv * jnp.float32(v) - 1.0
+
+        def reanchor(args):
+            y, rho_new, ycnt, ysum, dcnt = args
+            y = jnp.clip(y - rho_new, 0.0, 1.0)
+            by = _ogb_bucket(y, wv, v)
+            onesn = jnp.ones_like(y)
+            cl = jnp.zeros(v, jnp.float32).at[by].add(onesn)
+            sl = jnp.zeros(v, jnp.float32).at[by].add(y)
+            ycnt = pt.tree_build(cl, radix)
+            ysum = pt.tree_build(sl, radix)
+            if poisson:
+                dl = jnp.zeros(v, jnp.float32).at[
+                    _ogb_bucket(y - p, wv, v)
+                ].add(onesn)
+                dcnt = pt.tree_build(dl, radix)
+            return y, jnp.float32(0.0), ycnt, ysum, dcnt
+
+        y, rho_out, ycnt, ysum, dcnt = jax.lax.cond(
+            1.0 + rho_new + eta * jnp.float32(b) >= gridtop - wv,
+            reanchor,
+            lambda args: args,
+            (y, rho_new, ycnt, ysum, dcnt),
+        )
+        out = carry._replace(y=y, rho=rho_out, scratch=scratch,
+                             ycnt=ycnt, ysum=ysum, dcnt=dcnt)
+        return out, (reward, hits, rho_new - rho, occ)
+
+    return chunk
+
+
+# ---------------------------------------------------------------------------
+# unified entry points (mirrors engines.init_engine_carry / _STEPS)
+# ---------------------------------------------------------------------------
+def init_tree_engine_carry(
+    kind: str,
+    catalog_size: int,
+    capacity: int,
+    *,
+    n_slots: Optional[int] = None,
+    seed: int = 0,
+    zeta: Optional[float] = None,
+    horizon: Optional[int] = None,
+    ring: Optional[int] = None,
+):
+    if kind == "lru":
+        return init_tree_lru_carry(catalog_size, capacity, n_slots, ring)
+    if kind == "lfu":
+        return init_tree_lfu_carry(catalog_size, capacity, n_slots)
+    if kind == "ftpl":
+        return init_tree_ftpl_carry(catalog_size, capacity, n_slots,
+                                    seed=seed, zeta=zeta, horizon=horizon)
+    raise ValueError(
+        f"unknown tree engine kind {kind!r} (have {TREE_ENGINE_KINDS})"
+    )
+
+
+def make_tree_chunk(kind: str, carry):
+    """Chunk step ``(carry, ids) -> (carry, (hits, occupancy))`` matching
+    the given carry's static geometry."""
+    if kind == "lru":
+        m = pt.leaves_for_storage(carry.tree.shape[0], RING_RADIX)
+        inner = make_lru_tree_chunk(carry.last.shape[0] - 1, m)
+
+        def chunk(c, ids):
+            c, (hits, occ) = inner(c, ids)
+            return c, (hits, occ)
+
+        return chunk
+    if kind == "lfu":
+        inner = make_lfu_tree_chunk(carry.imap.shape[0] - 1,
+                                    carry.slots.shape[0])
+    elif kind == "ftpl":
+        inner = make_ftpl_tree_chunk(carry.imap.shape[0] - 1,
+                                     carry.slots.shape[0])
+    else:
+        raise ValueError(f"unknown tree engine kind {kind!r}")
+
+    def chunk(c, ids):
+        c, hits = inner(c, ids)
+        occ = jnp.sum((c.slots >= 0).astype(jnp.int32))
+        return c, (hits, occ)
+
+    return chunk

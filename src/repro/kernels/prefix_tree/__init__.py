@@ -1,0 +1,28 @@
+"""Device-resident implicit prefix trees (Fenwick/segment family).
+
+The paper's O(log N) per-request machinery, on device: packed radix trees
+over leaf vectors supporting point update, prefix/range query, weighted
+selection (Madow systematic sampling by tree descent) and lexicographic
+argmin — the data structures behind the tree-backed cache engines in
+:mod:`repro.cachesim.engines` and the lazy bucketized OGB in
+:mod:`repro.cachesim.api`.
+"""
+
+from .kernel import block_segment_sums, bucket_masses  # noqa: F401
+from .ops import (  # noqa: F401
+    madow_sample_tree,
+    minpair_argmin,
+    minpair_build,
+    minpair_root,
+    minpair_update,
+    sortable_f32,
+    tree_build,
+    tree_offsets,
+    tree_prefix,
+    tree_range,
+    tree_select,
+    tree_sizes,
+    tree_storage,
+    tree_total,
+    tree_update,
+)

@@ -1,0 +1,305 @@
+"""Packed radix prefix trees — the jnp data plane behind the O(log N) claim.
+
+A tree over ``n`` leaves with branching factor ``radix`` (a power of two)
+is stored as ONE flat array: level 0 is the leaves, level l+1 holds the
+per-group sums of level l, until a level fits in a single radix group.
+Every op is batched and ``lax.scan``-safe, sized for carry residency:
+
+* :func:`tree_update`   — batched point updates, O(Q log n) scatter-adds
+* :func:`tree_prefix`   — batched inclusive prefix sums, O(Q R log n)
+  gathers (gathers are an order of magnitude cheaper than scatters on every
+  backend we run, so queries buy their speed with sibling reads)
+* :func:`tree_select`   — batched weighted selection by root-to-leaf
+  descent, the O(C log N) Madow/systematic sampler of the paper
+* :func:`minpair_*`     — lexicographic (hi, lo) int32 min-trees for
+  eviction keys (LFU frequency/tick, FTPL perturbed score/id)
+
+``tree_build`` optionally routes its reduction passes through the Pallas
+block kernel in :mod:`.kernel` (TPU; interpret-mode elsewhere) — the jnp
+reshape fallback is bit-identical.
+
+No int64 anywhere: the x64 flag stays off, so float order is embedded into
+int32 via :func:`sortable_f32` and composite keys are (hi, lo) pairs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_sizes(n: int, radix: int) -> Tuple[int, ...]:
+    sizes = [int(n)]
+    while sizes[-1] > radix:
+        sizes.append(-(-sizes[-1] // radix))
+    return tuple(sizes)
+
+
+def tree_offsets(n: int, radix: int) -> Tuple[int, ...]:
+    offs, off = [], 0
+    for s in tree_sizes(n, radix):
+        offs.append(off)
+        off += s
+    return tuple(offs)
+
+
+def tree_storage(n: int, radix: int) -> int:
+    return sum(tree_sizes(n, radix))
+
+
+def leaves_for_storage(total: int, radix: int) -> int:
+    """Invert :func:`tree_storage` (leaf counts are powers of two here),
+    so scan bodies can recover static level geometry from a carry shape."""
+    n = 1
+    while n < total:
+        if tree_storage(n, radix) == total:
+            return n
+        n *= 2
+    raise ValueError(f"no power-of-two leaf count stores {total} nodes")
+
+
+def _shift(radix: int) -> int:
+    s = radix.bit_length() - 1
+    if 1 << s != radix:
+        raise ValueError(f"radix must be a power of two, got {radix}")
+    return s
+
+
+def tree_build(values: jax.Array, radix: int, *, use_kernel: bool = False,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """Flat packed tree from a leaf vector (any summable dtype)."""
+    sizes = tree_sizes(values.shape[0], radix)
+    parts, cur = [values], values
+    for size in sizes[1:]:
+        if use_kernel:
+            from .kernel import block_segment_sums
+
+            cur = block_segment_sums(cur, size, radix, interpret=interpret)
+        else:
+            pad = size * radix - cur.shape[0]
+            cur = jnp.pad(cur, (0, pad)).reshape(size, radix).sum(
+                axis=1, dtype=values.dtype
+            )
+        parts.append(cur)
+    return jnp.concatenate(parts)
+
+
+def tree_update(tree: jax.Array, n: int, radix: int, idx: jax.Array,
+                delta: jax.Array) -> jax.Array:
+    """Batched point update: add ``delta[q]`` along the ancestor path of
+    leaf ``idx[q]``; ``idx < 0`` entries are skipped (masked to no-ops)."""
+    offs = tree_offsets(n, radix)
+    sh = _shift(radix)
+    ok = idx >= 0
+    node = jnp.where(ok, idx, 0)
+    nodes, deltas = [], []
+    zero = jnp.zeros((), delta.dtype)
+    for off in offs:
+        nodes.append(off + node)
+        deltas.append(jnp.where(ok, delta, zero))
+        node = node >> sh
+    return tree.at[jnp.concatenate(nodes)].add(jnp.concatenate(deltas))
+
+
+def tree_total(tree: jax.Array, n: int, radix: int) -> jax.Array:
+    offs = tree_offsets(n, radix)
+    sizes = tree_sizes(n, radix)
+    return jnp.sum(jax.lax.dynamic_slice(tree, (offs[-1],), (sizes[-1],)))
+
+
+def tree_prefix(tree: jax.Array, n: int, radix: int,
+                idx: jax.Array) -> jax.Array:
+    """Batched inclusive prefix sums over leaves [0, idx]; idx < 0 -> 0.
+
+    Per level: gather the query ancestor's whole sibling group and mask the
+    left part — R cheap gathers instead of a data-dependent walk.
+    """
+    offs = tree_offsets(n, radix)
+    sizes = tree_sizes(n, radix)
+    sh = _shift(radix)
+    mask_lo = radix - 1
+    lane = jnp.arange(radix, dtype=jnp.int32)
+    ok = idx >= 0
+    node = jnp.where(ok, idx, 0)
+    acc = None
+    for l, off in enumerate(offs):
+        grp = (node >> sh) << sh
+        gidx = off + jnp.minimum(grp[..., None] + lane, sizes[l] - 1)
+        vals = tree[gidx]
+        lim = node & mask_lo
+        within = (
+            lane <= lim[..., None] if l == 0 else lane < lim[..., None]
+        )
+        part = jnp.sum(
+            jnp.where(within & ok[..., None], vals, 0), axis=-1
+        )
+        acc = part if acc is None else acc + part
+        node = node >> sh
+    return acc
+
+
+def tree_range(tree: jax.Array, n: int, radix: int, lo: jax.Array,
+               hi: jax.Array) -> jax.Array:
+    """Batched sums over leaf ranges [lo, hi] (empty when hi < lo)."""
+    return tree_prefix(tree, n, radix, hi) - tree_prefix(tree, n, radix,
+                                                         lo - 1)
+
+
+def tree_select(tree: jax.Array, n: int, radix: int,
+                targets: jax.Array) -> jax.Array:
+    """Batched weighted selection: smallest leaf with inclusive prefix
+    strictly above ``targets`` (float trees; the Madow descent)."""
+    offs = tree_offsets(n, radix)
+    sizes = tree_sizes(n, radix)
+    sh = _shift(radix)
+    lane = jnp.arange(radix, dtype=jnp.int32)
+    node = jnp.zeros(targets.shape, jnp.int32)
+    rem = targets
+    for l in range(len(offs) - 1, -1, -1):
+        base = node << sh if l < len(offs) - 1 else node
+        gidx = offs[l] + jnp.minimum(base[..., None] + lane, sizes[l] - 1)
+        valid = base[..., None] + lane < sizes[l]
+        vals = jnp.where(valid, tree[gidx], 0)
+        csum = jnp.cumsum(vals, axis=-1)
+        # first child whose cumulative mass exceeds the remaining target
+        take = jnp.sum((csum <= rem[..., None]).astype(jnp.int32), axis=-1)
+        take = jnp.minimum(take, radix - 1)
+        node = base + take
+        rem = rem - jnp.where(
+            take > 0,
+            jnp.take_along_axis(csum, (take - 1)[..., None], axis=-1)[..., 0],
+            jnp.zeros((), csum.dtype),
+        )
+    return jnp.minimum(node, n - 1)
+
+
+def madow_sample_tree(f: jax.Array, u: jax.Array, capacity: int,
+                      radix: int = 64, *, use_kernel: bool = False,
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """Madow/systematic sample of ``capacity`` distinct items by tree
+    descent: O(N/R) build passes + O(C log N) selection, replacing the
+    O(N) cumsum + C-way searchsorted.  Returns ascending leaf indices
+    (targets are ascending); distinct whenever all f <= 1."""
+    tree = tree_build(f, radix, use_kernel=use_kernel, interpret=interpret)
+    targets = u + jnp.arange(capacity, dtype=f.dtype)
+    return tree_select(tree, f.shape[0], radix, targets)
+
+
+def sortable_f32(x: jax.Array) -> jax.Array:
+    """Order-preserving float32 -> int32 (IEEE-754 total order; +0.0 added
+    so -0.0 and +0.0 map identically)."""
+    b = jax.lax.bitcast_convert_type(x + jnp.float32(0.0), jnp.int32)
+    return jnp.where(b < 0, b ^ jnp.int32(0x7FFFFFFF), b)
+
+
+# ---------------------------------------------------------------------------
+# lexicographic (hi, lo) min-trees — eviction keys
+# ---------------------------------------------------------------------------
+I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _lex_group_min(hi2: jax.Array, lo2: jax.Array):
+    """Per-row lexicographic min over the last axis -> (hi, lo, argmin)."""
+    mh = jnp.min(hi2, axis=-1)
+    tied = hi2 == mh[..., None]
+    lo_m = jnp.where(tied, lo2, I32_MAX)
+    ml = jnp.min(lo_m, axis=-1)
+    arg = jnp.argmin(
+        jnp.where(lo_m == ml[..., None], 0, 1).astype(jnp.int32), axis=-1
+    )
+    return mh, ml, arg
+
+
+def minpair_build(hi: jax.Array, lo: jax.Array, radix: int):
+    """Flat (tree_hi, tree_lo) min-trees over (hi, lo) int32 key pairs.
+    Padding nodes hold (I32_MAX, I32_MAX)."""
+    sizes = tree_sizes(hi.shape[0], radix)
+    parts_h, parts_l = [hi], [lo]
+    ch, cl = hi, lo
+    for size in sizes[1:]:
+        pad = size * radix - ch.shape[0]
+        ch = jnp.pad(ch, (0, pad), constant_values=I32_MAX).reshape(size, radix)
+        cl = jnp.pad(cl, (0, pad), constant_values=I32_MAX).reshape(size, radix)
+        mh, ml, _ = _lex_group_min(ch, cl)
+        ch, cl = mh, ml
+        parts_h.append(ch)
+        parts_l.append(cl)
+    return jnp.concatenate(parts_h), jnp.concatenate(parts_l)
+
+
+def minpair_root(tree_hi: jax.Array, tree_lo: jax.Array, n: int, radix: int):
+    offs = tree_offsets(n, radix)
+    sizes = tree_sizes(n, radix)
+    top_h = jax.lax.dynamic_slice(tree_hi, (offs[-1],), (sizes[-1],))
+    top_l = jax.lax.dynamic_slice(tree_lo, (offs[-1],), (sizes[-1],))
+    mh, ml, _ = _lex_group_min(top_h, top_l)
+    return mh, ml
+
+
+def minpair_argmin(tree_hi: jax.Array, tree_lo: jax.Array, n: int,
+                   radix: int) -> jax.Array:
+    """Leaf index of the lexicographic minimum (first index wins ties —
+    group argmins prefer the lowest child at every level)."""
+    offs = tree_offsets(n, radix)
+    sizes = tree_sizes(n, radix)
+    sh = _shift(radix)
+    node = jnp.zeros((), jnp.int32)
+    for l in range(len(offs) - 1, -1, -1):
+        base = node << sh if l < len(offs) - 1 else node
+        lane = jnp.arange(radix, dtype=jnp.int32)
+        idx = offs[l] + jnp.minimum(base + lane, sizes[l] - 1)
+        valid = base + lane < sizes[l]
+        h = jnp.where(valid, tree_hi[idx], I32_MAX)
+        lo_ = jnp.where(valid, tree_lo[idx], I32_MAX)
+        _, _, arg = _lex_group_min(h, lo_)
+        node = base + arg.astype(jnp.int32)
+    return node
+
+
+def minpair_update_plan(tree_hi: jax.Array, tree_lo: jax.Array, n: int,
+                        radix: int, idx: jax.Array, hi: jax.Array,
+                        lo: jax.Array):
+    """Plan a point update: the (nodes, hi_vals, lo_vals) scatter that sets
+    leaf ``idx`` to (hi, lo) and refreshes its ancestor mins, computed by
+    in-register substitution against the *current* trees.
+
+    Returning the plan instead of applying it is what lets the per-request
+    engines run delayed-write: apply the previous request's plan first, then
+    read — no read-after-write anti-dependency, no O(n) array copies."""
+    offs = tree_offsets(n, radix)
+    sizes = tree_sizes(n, radix)
+    sh = _shift(radix)
+    nodes = [idx]
+    vals_h, vals_l = [hi], [lo]
+    node, nh, nl = idx, hi, lo
+    for l in range(1, len(offs)):
+        grp = node >> sh
+        base = grp << sh
+        lane = jnp.arange(radix, dtype=jnp.int32)
+        gidx = offs[l - 1] + jnp.minimum(base + lane, sizes[l - 1] - 1)
+        valid = base + lane < sizes[l - 1]
+        h = jnp.where(valid, tree_hi[gidx], I32_MAX)
+        lo_ = jnp.where(valid, tree_lo[gidx], I32_MAX)
+        pos = node - base
+        h = h.at[pos].set(nh)
+        lo_ = lo_.at[pos].set(nl)
+        nh, nl, _ = _lex_group_min(h, lo_)
+        node = grp
+        nodes.append(node)
+        vals_h.append(nh)
+        vals_l.append(nl)
+    sidx = jnp.stack([offs[l] + nodes[l] for l in range(len(offs))])
+    return sidx, jnp.stack(vals_h), jnp.stack(vals_l)
+
+
+def minpair_update(tree_hi: jax.Array, tree_lo: jax.Array, n: int,
+                   radix: int, idx: jax.Array, hi: jax.Array,
+                   lo: jax.Array):
+    """Single point update: set leaf ``idx`` to (hi, lo) and recompute its
+    ancestor groups (the eager form of :func:`minpair_update_plan`)."""
+    sidx, vh, vl = minpair_update_plan(tree_hi, tree_lo, n, radix, idx, hi,
+                                       lo)
+    return tree_hi.at[sidx].set(vh), tree_lo.at[sidx].set(vl)

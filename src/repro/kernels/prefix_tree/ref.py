@@ -1,0 +1,93 @@
+"""Float64 numpy oracles for the prefix-tree kernel family.
+
+Everything here is deliberately naive — O(N) scans and explicit level
+lists — so the packed jnp/Pallas implementations in :mod:`.ops` and
+:mod:`.kernel` have an unambiguous reference for the differential tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def tree_sizes_ref(n: int, radix: int) -> list:
+    """Level sizes, leaves first, until a level fits in one radix group."""
+    sizes = [int(n)]
+    while sizes[-1] > radix:
+        sizes.append((sizes[-1] + radix - 1) // radix)
+    return sizes
+
+
+def build_ref(values, radix: int) -> list:
+    """List of per-level numpy arrays; level l node i sums its subtree."""
+    values = np.asarray(values)
+    levels = [values.copy()]
+    for size in tree_sizes_ref(len(values), radix)[1:]:
+        prev = levels[-1]
+        padded = np.zeros(size * radix, prev.dtype)
+        padded[: len(prev)] = prev
+        levels.append(padded.reshape(size, radix).sum(axis=1))
+    return levels
+
+
+def update_ref(levels: list, idx: int, delta, radix: int) -> None:
+    """Point update: add ``delta`` along the ancestor path, in place."""
+    node = int(idx)
+    for lvl in levels:
+        lvl[node] += delta
+        node //= radix
+
+
+def prefix_ref(levels: list, idx: int):
+    """Inclusive prefix sum of leaves [0, idx]; idx < 0 gives 0."""
+    if idx < 0:
+        return levels[0].dtype.type(0)
+    return levels[0][: int(idx) + 1].sum()
+
+
+def select_ref(levels: list, target: float) -> int:
+    """Smallest leaf i with inclusive prefix > target (weighted selection)."""
+    csum = np.cumsum(levels[0])
+    return int(np.searchsorted(csum, target, side="right"))
+
+
+def madow_sample_ref(f, u: float, capacity: int):
+    """Madow systematic sampling in float64: positions u, u+1, ... u+C-1
+    over cumsum(f).  Distinct whenever all f <= 1."""
+    f = np.asarray(f, np.float64)
+    csum = np.cumsum(f)
+    targets = u + np.arange(capacity, dtype=np.float64)
+    return np.searchsorted(csum, targets, side="right").astype(np.int64)
+
+
+def minpair_argmin_ref(hi, lo) -> int:
+    """Index of the lexicographic minimum of (hi, lo) int32 pairs; first
+    index wins ties (the eviction tie-break contract)."""
+    hi = np.asarray(hi)
+    lo = np.asarray(lo)
+    m = hi.min()
+    cand = np.where(hi == m)[0]
+    return int(cand[np.argmin(lo[cand])])
+
+
+def sortable_f32_ref(x):
+    """Order-preserving float32 -> int32 map (total order, -0 == +0)."""
+    x = np.asarray(x, np.float32) + np.float32(0.0)
+    b = x.view(np.int32)
+    return np.where(b < 0, b ^ np.int32(0x7FFFFFFF), b)
+
+
+def stack_distance_hits_ref(trace, capacity: int):
+    """Exact LRU hit sequence via reuse (stack) distances: a request hits
+    iff the number of distinct items since its previous occurrence is at
+    most capacity - 1.  O(T * window) — oracle only."""
+    trace = np.asarray(trace)
+    last = {}
+    hits = np.zeros(len(trace), bool)
+    for i, j in enumerate(trace):
+        j = int(j)
+        if j in last:
+            d = len(set(trace[last[j] + 1 : i].tolist()))
+            hits[i] = d <= capacity - 1
+        last[j] = i
+    return hits

@@ -48,7 +48,9 @@ def _kind_kwargs(kind):
 def test_stream_kinds_cover_the_registry():
     # the sweep below must cover every replayable kind (ogb_grad streams
     # dense gradients, not request ids, and is rightly excluded)
-    assert set(STREAM_KINDS) == {"ogb", "omd", "lru", "fifo", "lfu", "ftpl"}
+    assert set(STREAM_KINDS) == {
+        "ogb", "ogb_tree", "omd", "lru", "fifo", "lfu", "ftpl"
+    }
 
 
 @pytest.mark.parametrize("kind", STREAM_KINDS)

@@ -1,0 +1,156 @@
+"""Tree engines vs their dense oracles through the public policy API.
+
+The lru/lfu/ftpl prefix-tree engines must be *bit-exact* against the dense
+slot automata (same hit sequence, same occupancy); the lazy bucketized
+``ogb_tree`` tracks dense ``ogb`` within its histogram quantization.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.cachesim import api
+from repro.kernels.prefix_tree.ref import stack_distance_hits_ref
+
+AUTOMATA = ["lru", "lfu", "ftpl"]
+
+
+def _zipf_trace(rng, n, t, a=1.2):
+    ranks = rng.zipf(a, size=t * 3) - 1
+    ranks = ranks[ranks < n][:t]
+    return jnp.asarray(rng.permutation(n)[ranks], jnp.int32)
+
+
+def _traces():
+    rng = np.random.default_rng(42)
+    n, t = 400, 6000
+    zipf = _zipf_trace(rng, n, t)
+    cyclic = jnp.asarray(np.tile(np.arange(50), t // 50), jnp.int32)
+    bursty = jnp.asarray(
+        np.concatenate(
+            [np.repeat(rng.integers(0, n, 40), 30) for _ in range(5)]
+        ),
+        jnp.int32,
+    )
+    return {"zipf": (zipf, n), "cyclic": (cyclic, n), "bursty": (bursty, n)}
+
+
+TRACES = _traces()
+
+
+@pytest.mark.parametrize("kind", AUTOMATA)
+@pytest.mark.parametrize("trace_name", sorted(TRACES))
+@pytest.mark.parametrize("window", [1, 16, 250])
+def test_tree_bit_exact_vs_dense(kind, trace_name, window):
+    trace, n = TRACES[trace_name]
+    c = 23
+    rt = api.run(api.policy_def(kind), trace, n, c, window=window, seed=3)
+    rd = api.run(
+        api.policy_def(kind, impl="dense"), trace, n, c, window=window, seed=3
+    )
+    np.testing.assert_array_equal(rt.hits, rd.hits)
+    np.testing.assert_array_equal(rt.occupancy, rd.occupancy)
+
+
+def test_tree_lru_matches_stack_distance_oracle():
+    """The reuse-distance formulation IS exact LRU — check against the
+    O(T*W) python oracle, not just the dense automaton."""
+    rng = np.random.default_rng(0)
+    trace, n, c = _zipf_trace(rng, 120, 1500), 120, 11
+    r = api.run(api.policy_def("lru"), trace, n, c, window=50)
+    oracle = stack_distance_hits_ref(np.asarray(trace), c)
+    assert int(r.hits.sum()) == int(oracle.sum())
+
+
+@pytest.mark.parametrize("kind", AUTOMATA)
+def test_tree_resume_bit_exact(kind):
+    trace, n = TRACES["zipf"]
+    c, w = 23, 16
+    # ftpl's noise scale depends on horizon, which defaults to the replayed
+    # length — pin it so the split replay runs the same dynamics
+    h = len(trace)
+    full = api.run(api.policy_def(kind), trace, n, c, window=w, seed=1,
+                   horizon=h)
+    pd = api.policy_def(kind)
+    half = len(trace) // (2 * w) * w
+    r1 = api.run(pd, trace[:half], n, c, window=w, seed=1, horizon=h)
+    r2 = api.run(pd, trace[half:], capacity=c, window=w, carry=r1.carry)
+    np.testing.assert_array_equal(
+        np.concatenate([r1.hits, r2.hits]), full.hits
+    )
+
+
+@pytest.mark.parametrize("kind", AUTOMATA)
+def test_tree_sweep_matches_single_runs(kind):
+    trace, n = TRACES["zipf"]
+    caps = [5, 23, 64]
+    sw = api.sweep(api.policy_def(kind), trace, n, caps, window=100)
+    for combo, hits in zip(sw.combos, sw.hits):
+        single = api.run(
+            api.policy_def(kind), trace, n, combo["capacity"],
+            window=100, n_slots=max(caps),
+        )
+        np.testing.assert_array_equal(hits, single.hits)
+
+
+def test_tree_lru_small_ring_compaction_exact():
+    """Force ring compactions (ring barely above 4*n_slots) and check the
+    rank-compaction path stays bit-exact vs dense."""
+    rng = np.random.default_rng(5)
+    n, c, t, w = 600, 40, 8000, 100
+    trace = _zipf_trace(rng, n, t, a=1.1)
+    rt = api.run(api.policy_def("lru"), trace, n, c, window=w, ring=256)
+    rd = api.run(api.policy_def("lru", impl="dense"), trace, n, c, window=w)
+    np.testing.assert_array_equal(rt.hits, rd.hits)
+
+
+@pytest.mark.parametrize("sample", ["poisson", "none"])
+def test_ogb_tree_tracks_dense_ogb(sample):
+    rng = np.random.default_rng(9)
+    n, c, t, w = 1500, 75, 40000, 200
+    trace = _zipf_trace(rng, n, t)
+    rd = api.run(api.policy_def("ogb", sample=sample), trace, n, c,
+                 window=w, seed=3)
+    rt = api.run(api.policy_def("ogb_tree", sample=sample), trace, n, c,
+                 window=w, seed=3)
+    # fractional reward is sampling-free: a tight relative check
+    assert float(rt.reward.sum()) == pytest.approx(
+        float(rd.reward.sum()), rel=1e-2
+    )
+    if sample == "poisson":
+        assert abs(rt.hit_ratio - rd.hit_ratio) <= 5e-3
+        # occupancy stays near capacity (bucket-quantized estimate)
+        assert abs(np.mean(rt.occupancy) - c) < 0.2 * c
+
+
+def test_ogb_tree_reanchor_path():
+    """A tiny value grid (batch_hint=1) forces frequent re-anchor rebuilds;
+    accuracy must not degrade."""
+    rng = np.random.default_rng(10)
+    n, c, t, w = 800, 50, 30000, 100
+    trace = _zipf_trace(rng, n, t, a=1.3)
+    rd = api.run(api.policy_def("ogb"), trace, n, c, window=w, eta=0.01)
+    rt = api.run(api.policy_def("ogb_tree", batch_hint=1), trace, n, c,
+                 window=w, eta=0.01)
+    assert abs(rt.hit_ratio - rd.hit_ratio) <= 5e-3
+
+
+def test_ogb_tree_rejects_madow():
+    with pytest.raises(ValueError, match="madow"):
+        api.policy_def("ogb_tree", sample="madow")
+
+
+def test_madow_tree_sampling_matches_dense_madow():
+    """The O(C log N) tree-descent Madow draw through the dense OGB policy:
+    same systematic sample up to f32 cumsum boundaries, so hit counts agree
+    to a fraction of a percent."""
+    rng = np.random.default_rng(11)
+    n, c, t, w = 1000, 60, 20000, 200
+    trace = _zipf_trace(rng, n, t)
+    rm = api.run(api.policy_def("ogb", sample="madow", madow_capacity=c),
+                 trace, n, c, window=w, seed=2)
+    rt = api.run(api.policy_def("ogb", sample="madow_tree", madow_capacity=c),
+                 trace, n, c, window=w, seed=2)
+    assert abs(rt.hit_ratio - rm.hit_ratio) <= 2e-3
+    np.testing.assert_array_equal(rt.occupancy, rm.occupancy)

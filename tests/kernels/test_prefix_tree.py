@@ -1,0 +1,273 @@
+"""Prefix-tree kernel family vs float64 numpy oracles and core.treap.
+
+Covers the four tentpole capabilities: prefix-sum point-update/range-query,
+Madow sampling by tree descent, min-pair (eviction key) trees, and the
+Pallas block reductions (interpret mode on CPU).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.treap import Treap
+from repro.kernels.prefix_tree import (
+    block_segment_sums,
+    bucket_masses,
+    madow_sample_tree,
+    minpair_argmin,
+    minpair_build,
+    minpair_root,
+    minpair_update,
+    sortable_f32,
+    tree_build,
+    tree_prefix,
+    tree_range,
+    tree_select,
+    tree_storage,
+    tree_total,
+    tree_update,
+)
+from repro.kernels.prefix_tree import ref
+
+
+# ---------------------------------------------------------------------------
+# prefix-sum trees vs float64 oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [1, 5, 64, 65, 1000, 4097])
+@pytest.mark.parametrize("radix", [16, 64])
+def test_build_prefix_total_vs_ref(n, radix):
+    rng = np.random.default_rng(n * 131 + radix)
+    vals = rng.random(n).astype(np.float32)
+    tree = tree_build(jnp.asarray(vals), radix)
+    assert tree.shape[0] == tree_storage(n, radix)
+    levels = ref.build_ref(vals.astype(np.float64), radix)
+    idx = jnp.asarray(np.arange(-1, n), jnp.int32)
+    got = np.asarray(tree_prefix(tree, n, radix, idx))
+    expect = np.array([ref.prefix_ref(levels, i) for i in range(-1, n)])
+    np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(
+        float(tree_total(tree, n, radix)), vals.astype(np.float64).sum(),
+        rtol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("radix", [16, 64])
+def test_update_then_query_vs_ref(radix):
+    n, rounds, batch = 777, 8, 32
+    rng = np.random.default_rng(7)
+    vals = rng.random(n).astype(np.float32)
+    tree = tree_build(jnp.asarray(vals), radix)
+    levels = ref.build_ref(vals.astype(np.float64), radix)
+    for _ in range(rounds):
+        idx = rng.integers(-1, n, size=batch)  # -1 = masked no-op
+        delta = rng.standard_normal(batch).astype(np.float32)
+        tree = tree_update(
+            tree, n, radix, jnp.asarray(idx, jnp.int32), jnp.asarray(delta)
+        )
+        for i, d in zip(idx, delta):
+            if i >= 0:
+                ref.update_ref(levels, i, float(d), radix)
+        q = rng.integers(0, n, size=16)
+        got = np.asarray(tree_prefix(tree, n, radix, jnp.asarray(q, jnp.int32)))
+        expect = np.array([ref.prefix_ref(levels, i) for i in q])
+        np.testing.assert_allclose(got, expect, rtol=1e-4, atol=1e-3)
+
+
+def test_range_query_matches_slices():
+    n, radix = 513, 16
+    rng = np.random.default_rng(3)
+    vals = rng.random(n).astype(np.float32)
+    tree = tree_build(jnp.asarray(vals), radix)
+    lo = jnp.asarray([0, 10, 100, 500, 200], jnp.int32)
+    hi = jnp.asarray([0, 99, 99, 512, 199], jnp.int32)  # one empty range
+    got = np.asarray(tree_range(tree, n, radix, lo, hi))
+    expect = np.array(
+        [vals[l : h + 1].astype(np.float64).sum() for l, h in zip(lo, hi)]
+    )
+    np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-4)
+
+
+def test_prefix_matches_treap_order_statistics():
+    """Integer count tree == Treap.count_below on the same multiset."""
+    n, radix = 300, 16
+    rng = np.random.default_rng(11)
+    keys = rng.integers(0, n, size=500)
+    counts = np.bincount(keys, minlength=n).astype(np.float32)
+    tree = tree_build(jnp.asarray(counts), radix)
+    treap = Treap(seed=5)
+    for i, k in enumerate(keys):
+        treap.insert(float(k), i)
+    q = np.arange(n)
+    got = np.asarray(
+        tree_prefix(tree, n, radix, jnp.asarray(q, jnp.int32))
+    ).astype(np.int64)
+    # inclusive prefix over leaves [0, k] == #entries with key < k + 1
+    expect = np.array([treap.count_below(float(k) + 0.5) for k in q])
+    np.testing.assert_array_equal(got, expect)
+
+
+# ---------------------------------------------------------------------------
+# weighted selection / Madow sampling
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,radix", [(100, 16), (1000, 64), (4097, 64)])
+def test_select_vs_ref(n, radix):
+    rng = np.random.default_rng(n)
+    vals = (rng.random(n) < 0.3).astype(np.float32) * rng.random(n).astype(
+        np.float32
+    )
+    tree = tree_build(jnp.asarray(vals), radix)
+    levels = ref.build_ref(vals.astype(np.float64), radix)
+    total = vals.astype(np.float64).sum()
+    targets = np.linspace(0.0, total * 0.999, 50)
+    got = np.asarray(tree_select(tree, n, radix, jnp.asarray(targets, jnp.float32)))
+    expect = np.array([ref.select_ref(levels, t) for t in targets])
+    # f32 cumsum boundaries may land one leaf off exactly at a target tie;
+    # everywhere else the descent must agree with the float64 searchsorted
+    assert np.all(np.abs(got - expect) <= 1)
+    assert np.mean(got != expect) < 0.1
+
+
+@pytest.mark.parametrize("n,cap", [(50, 7), (2000, 100), (4096, 512)])
+def test_madow_tree_distinct_and_matches_ref(n, cap):
+    rng = np.random.default_rng(cap)
+    f = rng.random(n).astype(np.float32)
+    f = np.clip(f * (cap / f.sum()), 0.0, 1.0)
+    # make the mass >= cap so all C positions land inside the cumsum
+    f = np.minimum(f * (cap / max(f.sum(), 1e-9)), 1.0)
+    u = float(rng.random()) * 0.9
+    got = np.asarray(madow_sample_tree(jnp.asarray(f), jnp.float32(u), cap))
+    assert got.shape == (cap,)
+    assert len(set(got.tolist())) == cap  # distinct (systematic sampling)
+    assert np.all(np.diff(got) > 0)  # ascending targets -> ascending leaves
+    expect = ref.madow_sample_ref(f, u, cap)
+    assert np.mean(got != expect) < 0.05  # f32 boundary slips only
+    assert np.all(np.abs(got - expect) <= 1)
+
+
+# ---------------------------------------------------------------------------
+# min-pair trees (LFU/FTPL eviction keys)
+# ---------------------------------------------------------------------------
+def test_minpair_build_root_argmin_vs_ref():
+    rng = np.random.default_rng(0)
+    for n in (5, 64, 321):
+        hi = rng.integers(-3, 3, size=n).astype(np.int32)  # many ties
+        lo = rng.integers(0, n, size=n).astype(np.int32)
+        th, tl = minpair_build(jnp.asarray(hi), jnp.asarray(lo), 64)
+        rh, rl = minpair_root(th, tl, n, 64)
+        k = ref.minpair_argmin_ref(hi, lo)
+        assert (int(rh), int(rl)) == (int(hi[k]), int(lo[k]))
+        assert int(minpair_argmin(th, tl, n, 64)) == k
+
+
+def test_minpair_update_stream_vs_ref():
+    n, radix = 200, 64
+    rng = np.random.default_rng(9)
+    hi = rng.integers(0, 50, size=n).astype(np.int32)
+    lo = np.arange(n, dtype=np.int32)
+    th, tl = minpair_build(jnp.asarray(hi), jnp.asarray(lo), radix)
+    for step in range(60):
+        i = int(rng.integers(0, n))
+        nh = np.int32(rng.integers(0, 50))
+        hi[i] = nh
+        th, tl = minpair_update(
+            th, tl, n, radix, jnp.int32(i), jnp.asarray(nh), jnp.int32(lo[i])
+        )
+        k = ref.minpair_argmin_ref(hi, lo)
+        assert int(minpair_argmin(th, tl, n, radix)) == k, step
+
+
+def test_sortable_f32_preserves_order():
+    rng = np.random.default_rng(2)
+    x = np.concatenate(
+        [rng.standard_normal(500).astype(np.float32), [0.0, -0.0, 1e-30]]
+    )
+    got = np.asarray(sortable_f32(jnp.asarray(x)))
+    expect = ref.sortable_f32_ref(x)
+    np.testing.assert_array_equal(got, expect)
+    order = np.argsort(x, kind="stable")
+    assert np.all(np.diff(got[order]) >= 0)
+
+
+# ---------------------------------------------------------------------------
+# property tests (real hypothesis or the in-repo stub)
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=300),
+    radix=st.sampled_from([16, 64]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_property_interleaved_update_query(n, radix, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 5, size=n).astype(np.float32)
+    tree = tree_build(jnp.asarray(vals), radix)
+    dense = vals.astype(np.float64).copy()
+    for _ in range(4):
+        idx = rng.integers(0, n, size=8)
+        delta = rng.integers(-2, 3, size=8).astype(np.float32)
+        tree = tree_update(
+            tree, n, radix, jnp.asarray(idx, jnp.int32), jnp.asarray(delta)
+        )
+        np.add.at(dense, idx, delta.astype(np.float64))
+        q = int(rng.integers(0, n))
+        got = float(tree_prefix(tree, n, radix, jnp.asarray([q], jnp.int32))[0])
+        assert got == pytest.approx(dense[: q + 1].sum(), abs=1e-3)
+    assert float(tree_total(tree, n, radix)) == pytest.approx(
+        dense.sum(), abs=1e-3
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=200),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_property_minpair_matches_oracle(n, seed):
+    rng = np.random.default_rng(seed)
+    hi = rng.integers(-10, 10, size=n).astype(np.int32)
+    lo = rng.integers(0, n, size=n).astype(np.int32)
+    th, tl = minpair_build(jnp.asarray(hi), jnp.asarray(lo), 16)
+    assert int(minpair_argmin(th, tl, n, 16)) == ref.minpair_argmin_ref(hi, lo)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels, interpret mode (CPU-safe)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,radix", [(4096, 16), (65536, 64), (9999, 64)])
+def test_block_segment_sums_matches_jnp_build(n, radix):
+    rng = np.random.default_rng(n)
+    vals = rng.random(n).astype(np.float32)
+    out_size = (n + radix - 1) // radix
+    got = block_segment_sums(jnp.asarray(vals), out_size, radix, interpret=True)
+    padded = np.zeros(out_size * radix, np.float32)
+    padded[:n] = vals
+    expect = padded.reshape(out_size, radix).sum(axis=1)
+    np.testing.assert_allclose(np.asarray(got), expect, rtol=1e-6)
+
+
+def test_tree_build_kernel_path_matches_plain():
+    vals = jnp.asarray(np.random.default_rng(4).random(20000), jnp.float32)
+    plain = tree_build(vals, 64)
+    kern = tree_build(vals, 64, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(plain), np.asarray(kern), rtol=1e-6)
+
+
+def test_bucket_masses_matches_numpy():
+    v, k = 1024, 16
+    rng = np.random.default_rng(6)
+    cnt = rng.integers(0, 20, size=v).astype(np.float32)
+    s = cnt * rng.random(v).astype(np.float32) * 3.0
+    taus = np.linspace(0.0, 3.0, k).astype(np.float32)
+    mean = np.divide(s, cnt, out=np.zeros_like(s), where=cnt > 0)
+    expect = np.array(
+        [np.sum(cnt * np.clip(mean - t, 0.0, 1.0)) for t in taus]
+    )
+    got = np.asarray(
+        bucket_masses(jnp.asarray(cnt), jnp.asarray(s), jnp.asarray(taus),
+                      interpret=True)
+    )
+    np.testing.assert_allclose(got, expect, rtol=1e-4, atol=1e-2)
