@@ -36,12 +36,23 @@ BENCH_JSON = os.path.join(
     "BENCH_complexity.json",
 )
 
-#: device engines swept over N (name -> policy_def kwargs)
+#: device engines swept over N (name -> policy_def kwargs; ``sized=True``
+#: marks engines that take the slab size array and a byte capacity)
 DEVICE_ENGINES = {
     "ogb_scan": dict(kind="ogb"),
     "ogb_tree": dict(kind="ogb_tree"),
     "lru_tree": dict(kind="lru"),
+    "ogb_sized_tree": dict(kind="ogb_sized", flavor="tree", sized=True),
 }
+
+#: slab sizes for the sized engines (4 distinct values -> 4 exact size
+#: classes), anti-correlated with popularity like the sized_cdn scenario
+SIZE_SLABS = np.asarray([1.0, 4.0, 16.0, 64.0])
+
+
+def _slab_sizes(n: int) -> np.ndarray:
+    k = len(SIZE_SLABS)
+    return SIZE_SLABS[np.minimum(np.arange(n) * k // n, k - 1)]
 
 
 def fit_exponent(sizes, us):
@@ -80,10 +91,15 @@ def main() -> dict:
         # ahead of time, so the measured wall is the steady-state replay
         for name, kw in DEVICE_ENGINES.items():
             kw = dict(kw)
+            sized = kw.pop("sized", False)
             pd = policy_def(kw.pop("kind"), **kw)
+            sizes = _slab_sizes(N) if sized else None
+            cap = (
+                int(round(C * float(sizes.mean()))) if sized else C
+            )
             m = api_run(
-                pd, trace, N, C, window=B_scan, seed=13, track_opt=False,
-                keep_carry=False,
+                pd, trace, N, cap, window=B_scan, seed=13, track_opt=False,
+                keep_carry=False, sizes=sizes,
             )
             device[name][N] = m.us_per_request
             row[name] = m.us_per_request
@@ -112,9 +128,11 @@ def main() -> dict:
         print(f"device {name}: us/req ~ N^{p:.3f} "
               f"({'sublinear' if p < 0.5 else 'NOT sublinear'})")
     # the tentpole claim: the lazy tree projection's per-request cost must
-    # stay far from linear in the catalog size
+    # stay far from linear in the catalog size — for the unit engine AND
+    # its K-size-class weighted generalization
     assert exponents["ogb_tree"] < 0.5, exponents
     assert exponents["lru_tree"] < 0.5, exponents
+    assert exponents["ogb_sized_tree"] < 0.5, exponents
 
     bench = {
         "sizes": [int(n) for n in ns],

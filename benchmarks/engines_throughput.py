@@ -2,8 +2,9 @@
 
 Replays a fig7_8-class trace (zipf 0.9, N=20k, C=N/20) of T=1e6 requests
 through every registered policy engine (LRU/FIFO/LFU/FTPL automata, the OMD
-mirror-descent engine and the OGB scan replay) via the one unified
-``api.run`` path, on whatever backend JAX picks (CPU in CI).  The acceptance
+mirror-descent engine, the OGB scan/tree replays, and the sized engines —
+GDS on the min-pair tree and the size-aware ``ogb_sized`` tree) via the one
+unified ``api.run`` path, on whatever backend JAX picks (CPU in CI).  The acceptance
 bar is **< 15 us/request for every policy** — the bound that makes the
 paper-scale (T=2e7) comparison runs feasible.  A short host-side LRU run is
 timed for the speedup column.
@@ -55,14 +56,30 @@ def main() -> dict:
         "engines": {},
     }
 
-    for kind in ("lru", "fifo", "lfu", "ftpl", "omd", "ogb", "ogb_tree"):
+    # heterogeneous-size rows: slab sizes anti-correlated with popularity
+    # (the sized_cdn regime); ogb_sized takes the equivalent byte budget
+    slabs = np.asarray([1.0, 4.0, 16.0, 64.0])
+    sizes = slabs[np.minimum(np.arange(N) * len(slabs) // N, len(slabs) - 1)]
+    cap_bytes = int(round(C * float(sizes.mean())))
+
+    for kind in (
+        "lru", "fifo", "lfu", "ftpl", "omd", "ogb", "ogb_tree",
+        "gds", "ogb_sized",
+    ):
         pd = policy_def(kind)
+        sized = kind in ("gds", "ogb_sized")
         window = B if pd.fractional else max(T // 100, 1)
-        r = run(pd, trace, N, C, window=window, horizon=T, track_opt=False)
+        r = run(
+            pd, trace, N, cap_bytes if kind == "ogb_sized" else C,
+            window=window, horizon=T, track_opt=False,
+            sizes=sizes if sized else None,
+        )
         out["engines"][r.name] = {
             "us_per_request": r.us_per_request,
             "hit_ratio": r.hit_ratio,
         }
+        if sized:
+            out["engines"][r.name]["byte_hit_ratio"] = r.byte_hit_ratio
         csv_row(
             f"engines/{r.name}", r.us_per_request, f"hit_ratio={r.hit_ratio:.4f}"
         )

@@ -40,6 +40,7 @@ _LAZY = {
     "run_stream": "repro.cachesim.tracelab",
     "synthesize": "repro.cachesim.tracelab",
     "synthesize_chunks": "repro.cachesim.tracelab",
+    "synthesize_sizes": "repro.cachesim.tracelab",
     "write_trace": "repro.cachesim.tracelab",
     # host-side policies (the slow exact oracles) + per-request simulator
     "make_policy": "repro.core.policies",

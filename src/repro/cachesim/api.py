@@ -53,6 +53,7 @@ from repro.core.ogb import theoretical_eta
 from repro.core.omd import theoretical_eta_omd
 from repro.core.policies import ENGINE_DEFS, register_engine_def
 from repro.core.regret import best_static_hits
+from repro.kernels.capped_simplex.ops import weighted_simplex_project
 from repro.jaxcache.fractional import (
     DEFAULT_BISECT_ITERS,
     DEFAULT_WARM_SWEEPS,
@@ -78,12 +79,16 @@ class StepOut(NamedTuple):
 
     ``reward`` is the *pre-update* fractional reward (OCO order) — equal to
     ``hits`` for the integral automata; ``aux`` is the projection threshold
-    (tau for OGB, lambda for OMD, 0 for automata)."""
+    (tau for OGB, lambda for OMD, 0 for automata).  ``byte_hits`` is the
+    size-weighted hit mass of sized runs; the default ``None`` is an empty
+    pytree node, so unsized steps/carries are structurally unchanged and
+    every existing golden stays bit-exact."""
 
     reward: jax.Array  # () float32
     hits: jax.Array  # () int32
     aux: jax.Array  # () float32
     occupancy: jax.Array  # () float32
+    byte_hits: Any = None  # () float32 for sized runs, else None
 
 
 @dataclass(frozen=True)
@@ -213,6 +218,8 @@ def run(
     eta: Optional[float] = None,
     horizon: Optional[int] = None,
     n_slots: Optional[int] = None,
+    sizes: Optional[np.ndarray] = None,
+    costs: Optional[np.ndarray] = None,
     track_opt: bool = True,
     keep_carry: bool = True,
     name: Optional[str] = None,
@@ -236,6 +243,15 @@ def run(
     only read for metrics: the final carry is several (N,)-sized device
     arrays, and dropping it releases that memory immediately (results
     accumulated in a sweep loop otherwise pin it for their lifetime).
+
+    **Sized runs:** pass per-item ``sizes`` (bytes) to thread the paper's
+    cost-aware setting through: sized policies (``ogb_sized``, ``gds``)
+    shape their decisions with them, the automata account size-weighted
+    (byte) hits, and the result gains ``byte_hits``/``bytes_total`` so
+    ``byte_hit_ratio`` reflects bytes served from cache.  ``costs``
+    overrides the per-item miss costs (default: the sizes).  On resume
+    the carry already holds the policy-side sizes; ``sizes`` may still be
+    passed for the host-side byte accounting.
     """
     chunks, trace_used, t_used = _chunked(trace, window)
     extras = {}
@@ -246,6 +262,11 @@ def run(
             eta = pd.default_eta(
                 int(catalog_size), int(capacity), t_used, window
             )
+        sized_kw = {}
+        if sizes is not None:
+            sized_kw["sizes"] = np.asarray(sizes)
+        if costs is not None:
+            sized_kw["costs"] = np.asarray(costs)
         carry = pd.init(
             int(catalog_size),
             int(capacity),
@@ -253,6 +274,7 @@ def run(
             eta=eta,
             horizon=int(horizon) if horizon is not None else t_used,
             n_slots=n_slots,
+            **sized_kw,
             **init_kw,
         )
         if eta is not None:
@@ -262,13 +284,16 @@ def run(
         or horizon is not None
         or n_slots is not None
         or seed != 0
+        or costs is not None
         or any(v is not None for v in init_kw.values())
     ):
         # a resumed run takes every policy parameter from the carry; a
         # silently-ignored eta or seed would mislabel sweep results
+        # (sizes= stays allowed: it only drives host-side byte accounting)
         raise ValueError(
             "run(carry=...) resumes with the carry's parameters; do not "
-            "pass seed/eta/horizon/n_slots/init kwargs alongside a carry"
+            "pass seed/eta/horizon/n_slots/costs/init kwargs alongside a "
+            "carry"
         )
     compiled = _compiled(_scan_jit(pd.step), carry, chunks)
     t0 = time.perf_counter()
@@ -280,6 +305,11 @@ def run(
         if (track_opt and capacity is not None)
         else 0.0
     )
+    bytes_total = 0.0
+    if sizes is not None:
+        bytes_total = float(
+            np.sum(np.asarray(sizes, np.float64)[trace_used])
+        )
     return RunResult(
         name=name or pd.name,
         kind=pd.kind,
@@ -294,6 +324,12 @@ def run(
         carry=carry if keep_carry else None,
         wall_seconds=wall,
         extras=extras,
+        byte_hits=(
+            np.asarray(out.byte_hits, np.float64)
+            if out.byte_hits is not None
+            else None
+        ),
+        bytes_total=bytes_total,
     )
 
 
@@ -307,6 +343,8 @@ def sweep(
     seeds: Sequence[int] = (0,),
     window: int = 1000,
     horizon: Optional[int] = None,
+    sizes: Optional[np.ndarray] = None,
+    costs: Optional[np.ndarray] = None,
     track_opt: bool = True,
     **init_kw,
 ) -> SweepResult:
@@ -324,6 +362,11 @@ def sweep(
     if horizon is None:
         horizon = t_used
     n_slots = int(max(capacities))
+    sized_kw = {}
+    if sizes is not None:
+        sized_kw["sizes"] = np.asarray(sizes)
+    if costs is not None:
+        sized_kw["costs"] = np.asarray(costs)
     combos, carries = [], []
     for s in seeds:
         for eta in etas:
@@ -334,7 +377,9 @@ def sweep(
                         int(catalog_size), int(C), t_used, window
                     )
                 combo = {"capacity": int(C), "seed": int(s)}
-                if pd.fractional:
+                if pd.fractional and e is not None:
+                    # ogb_sized resolves eta=None inside init (it needs the
+                    # sizes); its default-tuned combos just omit the key
                     combo["eta"] = float(e)
                 combos.append(combo)
                 carries.append(
@@ -345,6 +390,7 @@ def sweep(
                         eta=e,
                         horizon=int(horizon),
                         n_slots=n_slots,
+                        **sized_kw,
                         **init_kw,
                     )
                 )
@@ -359,6 +405,11 @@ def sweep(
         if track_opt
         else np.zeros(len(combos))
     )
+    bytes_total = 0.0
+    if sizes is not None:
+        bytes_total = float(
+            np.sum(np.asarray(sizes, np.float64)[trace_used])
+        )
     return SweepResult(
         kind=pd.kind,
         combos=combos,
@@ -370,6 +421,12 @@ def sweep(
         occupancy=np.asarray(out.occupancy, np.float64),
         opt_hits=opt,
         wall_seconds=wall,
+        byte_hits=(
+            np.asarray(out.byte_hits, np.float64)
+            if out.byte_hits is not None
+            else None
+        ),
+        bytes_total=bytes_total,
     )
 
 
@@ -385,6 +442,48 @@ class OGBCarry(NamedTuple):
     cap: jax.Array  # () float32 capacity
     p: jax.Array  # (N,) permanent random numbers (poisson) or (0,)
     u_key: jax.Array  # (2,) uint32 key data for per-chunk Madow offsets
+    t: jax.Array  # () int32 chunk counter
+
+
+class SizedAutomatonCarry(NamedTuple):
+    """A discrete automaton carry paired with per-item byte sizes.
+
+    The inner automaton is size-blind (its decisions are unchanged by
+    construction — same hit flags as the unsized carry); the sizes only
+    weight the hit accounting, turning ``StepOut.byte_hits`` on.  The
+    wrapper changes the carry pytree structure, so sized and unsized runs
+    compile separately and unsized goldens stay bit-exact."""
+
+    inner: Any  # the unchanged automaton carry (tree or dense)
+    szs: jax.Array  # (N,) float32 per-item sizes (bytes)
+
+
+def _sizes_array(sizes, catalog_size: int) -> jnp.ndarray:
+    s = np.asarray(sizes, np.float32)
+    if s.shape != (int(catalog_size),):
+        raise ValueError(
+            f"sizes must be a ({catalog_size},) array, got {s.shape}"
+        )
+    if not (np.all(np.isfinite(s)) and float(s.min()) > 0.0):
+        raise ValueError("sizes must be finite and > 0")
+    return jnp.asarray(s)
+
+
+class SizedOGBScanCarry(NamedTuple):
+    """Dense (scan-flavor) sized-OGB state: exact per-item sizes, O(N)
+    weighted projection per chunk.  The differential oracle for the
+    O(K log N) tree flavor.  Sizes/costs are normalized by their mean
+    (``sref``) so uniform sizes reduce to the unit OGB dynamics at the
+    same eta; byte outputs are scaled back by ``sref``."""
+
+    f: jax.Array  # (N,) float32 projected fractional state
+    tau: jax.Array  # () float32 last weighted-projection threshold
+    eta: jax.Array  # () float32
+    cap: jax.Array  # () float32 capacity in normalized bytes
+    s: jax.Array  # (N,) float32 normalized exact per-item sizes
+    wts: jax.Array  # (N,) float32 normalized gradient weights (costs)
+    sref: jax.Array  # () float32 bytes per normalized size unit
+    p: jax.Array  # (N,) float32 permanent random numbers, or (0,)
     t: jax.Array  # () int32 chunk counter
 
 
@@ -444,7 +543,12 @@ def _ogb_def(
     )
 
     def init(catalog_size, capacity, *, seed=0, eta=None, horizon=None,
-             n_slots=None):
+             n_slots=None, sizes=None, costs=None):
+        if sizes is not None or costs is not None:
+            raise ValueError(
+                "ogb is unit-size; use policy_def('ogb_sized') for "
+                "per-item sizes/costs"
+            )
         if eta is None:
             raise ValueError("ogb init needs eta (run() resolves eta=None)")
         if sample in ("madow", "madow_tree") and int(madow_capacity) != int(
@@ -496,7 +600,12 @@ def _omd_def(
     )
 
     def init(catalog_size, capacity, *, seed=0, eta=None, horizon=None,
-             n_slots=None):
+             n_slots=None, sizes=None, costs=None):
+        if sizes is not None or costs is not None:
+            raise ValueError(
+                "omd is unit-size; use policy_def('ogb_sized') for "
+                "per-item sizes/costs"
+            )
         if eta is None:
             raise ValueError("omd init needs eta (run() resolves eta=None)")
         if sample in ("madow", "madow_tree") and int(madow_capacity) != int(
@@ -564,7 +673,12 @@ def _ogb_tree_def(
         )
 
     def init(catalog_size, capacity, *, seed=0, eta=None, horizon=None,
-             n_slots=None):
+             n_slots=None, sizes=None, costs=None):
+        if sizes is not None or costs is not None:
+            raise ValueError(
+                "ogb_tree is unit-size; use policy_def('ogb_sized', "
+                "flavor='tree') for per-item sizes/costs"
+            )
         if eta is None:
             raise ValueError(
                 "ogb_tree init needs eta (run() resolves eta=None)"
@@ -611,18 +725,32 @@ def _automaton_def(
     oracle.  Both produce bit-identical hit sequences; only the carry
     layout differs.  FIFO has no tree form (insertion order is not a reuse
     distance) and always runs dense.
+
+    Sized runs: ``init(..., sizes=...)`` wraps the unchanged carry in a
+    :class:`SizedAutomatonCarry` — the automaton stays size-blind (identical
+    decisions, slot-based capacity), but every hit is also weighted by the
+    requested item's bytes so the result carries ``byte_hits``.  ``costs``
+    are rejected — these automata have no cost model (use ``gds``).
     """
     if impl is None:
         impl = "tree" if kind in _tree_engines.TREE_ENGINE_KINDS else "dense"
     def_zeta = zeta
+
+    def _reject_costs(costs):
+        if costs is not None:
+            raise ValueError(
+                f"{kind} has no miss-cost model (costs= unsupported); "
+                "use policy_def('gds') or policy_def('ogb_sized')"
+            )
 
     if impl == "tree":
         if kind not in _tree_engines.TREE_ENGINE_KINDS:
             raise ValueError(f"no tree engine for kind {kind!r}")
 
         def init(catalog_size, capacity, *, seed=0, eta=None, horizon=None,
-                 n_slots=None, zeta=None, ring=None):
-            return _tree_engines.init_tree_engine_carry(
+                 n_slots=None, zeta=None, ring=None, sizes=None, costs=None):
+            _reject_costs(costs)
+            inner = _tree_engines.init_tree_engine_carry(
                 kind,
                 catalog_size,
                 capacity,
@@ -632,17 +760,37 @@ def _automaton_def(
                 horizon=horizon,
                 ring=ring,
             )
+            if sizes is None:
+                return inner
+            return SizedAutomatonCarry(
+                inner, _sizes_array(sizes, catalog_size)
+            )
 
         def step(carry, ids):
             # static geometry comes from the (traced) carry's shapes, so
             # one PolicyDef serves every catalog/window combination
-            chunk = _tree_engines.make_tree_chunk(kind, carry)
-            carry, (hits, occ) = chunk(carry, ids)
-            return carry, StepOut(
+            sized = isinstance(carry, SizedAutomatonCarry)
+            inner = carry.inner if sized else carry
+            chunk = _tree_engines.make_tree_chunk(
+                kind, inner, return_flags=sized
+            )
+            inner, (hits, occ) = chunk(inner, ids)
+            if not sized:
+                return inner, StepOut(
+                    hits.astype(jnp.float32),
+                    hits,
+                    jnp.zeros((), jnp.float32),
+                    occ.astype(jnp.float32),
+                )
+            flags = hits  # (window,) per-request, aligned with ids
+            hits = jnp.sum(flags.astype(jnp.int32))
+            byte_hits = jnp.sum(jnp.where(flags, carry.szs[ids], 0.0))
+            return SizedAutomatonCarry(inner, carry.szs), StepOut(
                 hits.astype(jnp.float32),
                 hits,
                 jnp.zeros((), jnp.float32),
                 occ.astype(jnp.float32),
+                byte_hits,
             )
 
         return PolicyDef(kind=kind, name=kind.upper(), init=init, step=step)
@@ -652,8 +800,9 @@ def _automaton_def(
     raw = _engines._STEPS[kind]
 
     def init(catalog_size, capacity, *, seed=0, eta=None, horizon=None,
-             n_slots=None, zeta=None):
-        return _engines.init_engine_carry(
+             n_slots=None, zeta=None, sizes=None, costs=None):
+        _reject_costs(costs)
+        inner = _engines.init_engine_carry(
             kind,
             catalog_size,
             capacity,
@@ -662,15 +811,30 @@ def _automaton_def(
             zeta=zeta if zeta is not None else def_zeta,
             horizon=horizon,
         )
+        if sizes is None:
+            return inner
+        return SizedAutomatonCarry(inner, _sizes_array(sizes, catalog_size))
 
     def step(carry, ids):
-        carry, hitflags = jax.lax.scan(raw, carry, ids)
+        sized = isinstance(carry, SizedAutomatonCarry)
+        inner = carry.inner if sized else carry
+        inner, hitflags = jax.lax.scan(raw, inner, ids)
         hits = jnp.sum(hitflags.astype(jnp.int32))
-        return carry, StepOut(
+        occ = _engines._occ_slots(inner).astype(jnp.float32)
+        if not sized:
+            return inner, StepOut(
+                hits.astype(jnp.float32),
+                hits,
+                jnp.zeros((), jnp.float32),
+                occ,
+            )
+        byte_hits = jnp.sum(jnp.where(hitflags, carry.szs[ids], 0.0))
+        return SizedAutomatonCarry(inner, carry.szs), StepOut(
             hits.astype(jnp.float32),
             hits,
             jnp.zeros((), jnp.float32),
-            _engines._occ_slots(carry).astype(jnp.float32),
+            occ,
+            byte_hits,
         )
 
     return PolicyDef(kind=kind, name=kind.upper(), init=init, step=step)
@@ -688,7 +852,10 @@ def _ogb_grad_def(iters: int = DEFAULT_BISECT_ITERS) -> PolicyDef:
     one step at a time via the carry contract)."""
 
     def init(catalog_size, capacity, *, seed=0, eta=None, horizon=None,
-             n_slots=None):
+             n_slots=None, sizes=None, costs=None):
+        if sizes is not None or costs is not None:
+            raise ValueError("ogb_grad is unit-size (weights ride the "
+                             "gradient vector); sizes/costs unsupported")
         if eta is None:
             raise ValueError("ogb_grad init needs eta")
         # legacy expert-cache stream: p drawn straight from key(seed)
@@ -726,9 +893,188 @@ def _ogb_grad_def(iters: int = DEFAULT_BISECT_ITERS) -> PolicyDef:
                      fractional=True, trace_driven=False)
 
 
+def _gds_def() -> PolicyDef:
+    """GreedyDual-Size: the classical size/cost-aware automaton baseline.
+
+    Runs on the min-pair eviction trees (O(log C) per request) with
+    size-normalized keys H_i = L + cost_i / size_i — differential-tested
+    against the host ``core.policies.GDS`` oracle.  Unit sizes/costs
+    reduce it to an LRU-like automaton (every H increment equal).  Always
+    emits ``byte_hits`` (== hits when unit-size)."""
+
+    def init(catalog_size, capacity, *, seed=0, eta=None, horizon=None,
+             n_slots=None, sizes=None, costs=None):
+        return _tree_engines.init_tree_gds_carry(
+            int(catalog_size),
+            int(capacity),
+            n_slots,
+            sizes=sizes,
+            costs=costs,
+        )
+
+    def step(carry, ids):
+        chunk = _tree_engines.make_tree_chunk("gds", carry,
+                                              return_flags=True)
+        carry, (flags, occ) = chunk(carry, ids)
+        hits = jnp.sum(flags.astype(jnp.int32))
+        byte_hits = jnp.sum(jnp.where(flags, carry.szs[ids], 0.0))
+        return carry, StepOut(
+            hits.astype(jnp.float32),
+            hits,
+            jnp.zeros((), jnp.float32),
+            occ.astype(jnp.float32),
+            byte_hits,
+        )
+
+    return PolicyDef(kind="gds", name="GDS", init=init, step=step)
+
+
+def _ogb_sized_def(
+    flavor: str = "tree",
+    sample: str = "poisson",
+    classes: int = _tree_engines.SIZED_OGB_CLASSES,
+    buckets: int = _tree_engines.OGB_TREE_BUCKETS,
+    radix: int = _tree_engines.OGB_TREE_RADIX,
+    iters: int = _tree_engines.OGB_TREE_ITERS,
+    proj_iters: int = DEFAULT_BISECT_ITERS,
+    batch_hint: int = 4096,
+) -> PolicyDef:
+    """Size-aware OGB over the knapsack-relaxed feasible set (paper §8).
+
+    ``flavor="tree"`` is the O(K * B log V) per-size-class lazy bucketized
+    form; ``flavor="scan"`` is the dense O(N)-per-chunk form with *exact*
+    per-item sizes and a full weighted bisection projection — the
+    differential oracle for the tree flavor (both are property-tested
+    against the float64 ``core.ogb_sized`` oracle).  ``init`` requires
+    per-item ``sizes`` (pass ``run(..., sizes=...)``); ``costs`` default
+    to the sizes (byte-weighted rewards).  ``eta=None`` resolves to the
+    Theorem 3.1 rate at the byte capacity expressed in mean-object units
+    — the natural reduction of the unit tuning to heterogeneous sizes.
+    """
+    if flavor not in ("tree", "scan"):
+        raise ValueError(f"ogb_sized flavor must be 'tree'|'scan': {flavor!r}")
+    if sample not in ("poisson", "none"):
+        raise ValueError(
+            f"ogb_sized supports sample='poisson'|'none' (got {sample!r})"
+        )
+
+    def init(catalog_size, capacity, *, seed=0, eta=None, horizon=None,
+             n_slots=None, sizes=None, costs=None):
+        if sizes is None:
+            raise ValueError(
+                "ogb_sized init needs per-item sizes: run(..., sizes=...)"
+            )
+        n = int(catalog_size)
+        s64 = np.asarray(sizes, np.float64)
+        if s64.shape != (n,):
+            raise ValueError(f"sizes must be a ({n},) array: {s64.shape}")
+        if eta is None:
+            # Theorem 3.1 tuning with the capacity in mean-object units
+            c_eq = float(capacity) / float(np.mean(s64))
+            eta = theoretical_eta(c_eq, n, int(horizon or 1), 1)
+        if flavor == "tree":
+            return _tree_engines.init_sized_ogb_tree_carry(
+                n,
+                float(capacity),
+                sizes=s64,
+                costs=costs,
+                eta=float(eta),
+                seed=seed,
+                sample=sample,
+                classes=classes,
+                buckets=buckets,
+                radix=radix,
+                batch_hint=batch_hint,
+            )
+        # scan flavor: exact sizes, same mean-size normalization
+        if not (np.all(np.isfinite(s64)) and float(s64.min()) > 0.0):
+            raise ValueError("sizes must be finite and > 0")
+        sref = float(np.mean(s64))
+        s_n = s64 / sref
+        if costs is None:
+            w = s_n.copy()
+        else:
+            w = np.asarray(costs, np.float64) / sref
+            if w.shape != (n,):
+                raise ValueError(f"costs must be a ({n},) array")
+            if not (np.all(np.isfinite(w)) and w.min() > 0.0):
+                raise ValueError("costs must be finite and > 0")
+        cap_n = float(capacity) / sref
+        total_s = float(np.sum(s_n))
+        if cap_n >= total_s:
+            raise ValueError(
+                f"capacity {capacity} holds the whole catalog; caching is "
+                "trivial"
+            )
+        f0 = cap_n / total_s
+        p, _ = _sampling_init(seed, n, sample)
+        return SizedOGBScanCarry(
+            f=jnp.full(n, f0, jnp.float32),
+            tau=jnp.zeros((), jnp.float32),
+            eta=jnp.float32(eta),
+            cap=jnp.float32(cap_n),
+            s=jnp.asarray(s_n, jnp.float32),
+            wts=jnp.asarray(w, jnp.float32),
+            sref=jnp.float32(sref),
+            p=p,
+            t=jnp.zeros((), jnp.int32),
+        )
+
+    if flavor == "tree":
+
+        def step(carry, ids):
+            chunk = _tree_engines.make_sized_ogb_tree_chunk(
+                carry.y.shape[0], carry.s.shape[0], buckets, radix,
+                sample, iters,
+            )
+            carry, (reward, hits, byte_hits, drho, occ) = chunk(carry, ids)
+            return carry, StepOut(
+                reward * carry.sref, hits, drho, occ, byte_hits
+            )
+
+    else:
+
+        def step(carry, ids):
+            f, s, wts, p, sref = carry.f, carry.s, carry.wts, carry.p, \
+                carry.sref
+            sj = s[ids]
+            wj = wts[ids]
+            fi = f[ids]
+            reward = jnp.sum(wj * fi)  # pre-update (OCO order)
+            if sample == "poisson":
+                hflag = fi >= p[ids]
+                hits = jnp.sum(hflag.astype(jnp.int32))
+                byte_hits = jnp.sum(jnp.where(hflag, sj, 0.0)) * sref
+                occ = jnp.sum(
+                    jnp.where(f >= p, s, 0.0)
+                ) * sref
+            else:
+                hits = jnp.zeros((), jnp.int32)
+                byte_hits = jnp.zeros((), jnp.float32)
+                occ = carry.cap * sref
+            y = f.at[ids].add(carry.eta * wj)
+            f_new, tau = weighted_simplex_project(
+                y, s, carry.cap, proj_iters
+            )
+            carry = carry._replace(f=f_new, tau=tau, t=carry.t + 1)
+            return carry, StepOut(
+                reward * sref, hits, tau, occ, byte_hits
+            )
+
+    return PolicyDef(
+        kind="ogb_sized",
+        name=f"OGB_sized_{flavor}",
+        init=init,
+        step=step,
+        fractional=True,
+    )
+
+
 register_policy_def("ogb", _ogb_def)
 register_policy_def("ogb_tree", _ogb_tree_def)
 register_policy_def("omd", _omd_def)
 register_policy_def("ogb_grad", _ogb_grad_def)
+register_policy_def("gds", _gds_def)
+register_policy_def("ogb_sized", _ogb_sized_def)
 for _kind in _engines.ENGINE_KINDS:
     register_policy_def(_kind, functools.partial(_automaton_def, _kind))

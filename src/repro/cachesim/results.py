@@ -45,6 +45,18 @@ class HitStatsMixin:
         return float(np.sum(self.hits)) / max(self.T, 1)
 
     @property
+    def byte_hit_ratio(self) -> float:
+        """Bytes served from cache over bytes requested (sized runs).
+
+        Falls back to the object hit ratio for unsized runs (every object
+        one byte), so callers can read it unconditionally."""
+        bh = getattr(self, "byte_hits", None)
+        bt = float(getattr(self, "bytes_total", 0.0) or 0.0)
+        if bh is None or bt <= 0.0:
+            return self.hit_ratio
+        return float(np.sum(bh)) / bt
+
+    @property
     def us_per_request(self) -> float:
         return 1e6 * self.wall_seconds / max(self.T, 1)
 
@@ -72,6 +84,8 @@ class RunResult(HitStatsMixin):
     carry: Any = None  # final device carry (resumable)
     wall_seconds: float = 0.0
     extras: Dict[str, float] = field(default_factory=dict)
+    byte_hits: Optional[np.ndarray] = None  # (M,) per-chunk byte hits (sized)
+    bytes_total: float = 0.0  # total bytes requested (sized runs, else 0)
 
     # legacy spellings (ReplayMetrics / EngineResult)
     @property
@@ -184,10 +198,19 @@ class SweepResult:
     occupancy: np.ndarray  # (R, M)
     opt_hits: np.ndarray  # (R,) hindsight static-OPT per combo (host-side)
     wall_seconds: float = 0.0
+    byte_hits: Optional[np.ndarray] = None  # (R, M) per-chunk byte hits
+    bytes_total: float = 0.0  # total bytes requested (sized runs, else 0)
 
     @property
     def batch(self) -> int:
         return self.window
+
+    @property
+    def byte_hit_ratios(self) -> np.ndarray:
+        """Per-combo byte hit ratio (falls back to object ratio unsized)."""
+        if self.byte_hits is None or self.bytes_total <= 0.0:
+            return self.hit_ratios
+        return self.byte_hits.sum(axis=1) / self.bytes_total
 
     @property
     def frac_reward(self) -> np.ndarray:

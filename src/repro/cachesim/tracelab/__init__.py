@@ -41,6 +41,7 @@ from repro.cachesim.tracelab.synth import (
     fit_profile,
     synthesize,
     synthesize_chunks,
+    synthesize_sizes,
 )
 
 __all__ = [
@@ -54,5 +55,6 @@ __all__ = [
     "sniff_format",
     "synthesize",
     "synthesize_chunks",
+    "synthesize_sizes",
     "write_trace",
 ]

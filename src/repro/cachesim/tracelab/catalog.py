@@ -35,6 +35,13 @@ class CatalogRemap:
     ``apply(chunk)`` remaps one chunk; ``remap(chunks)`` lifts it over an
     iterator.  ``len(remap)`` is the dense catalog size so far, and
     ``raw_ids[d]`` recovers the raw id behind dense id ``d``.
+
+    Sized traces: ``apply(chunk, sizes=...)`` additionally records each
+    item's size (bytes) the first time a sized request for it is seen, so
+    the mapping stays a pure function of the request stream (chunking
+    cannot change which size wins).  ``item_sizes`` densifies them to a
+    ``(len(self),)`` array for the policy engines; ids never observed with
+    a size (and the clamp bucket) read the unit default ``1.0``.
     """
 
     def __init__(
@@ -54,6 +61,7 @@ class CatalogRemap:
         self.clamped = 0  # requests folded into the bucket under "clamp"
         self._table: Dict[int, int] = {}
         self._raw: List[int] = []  # dense -> raw, first-seen order
+        self._sizes: Dict[int, float] = {}  # dense -> first-seen size
         #: reserved bucket id under "clamp" (assigned lazily on first spill)
         self._bucket: Optional[int] = None
 
@@ -75,12 +83,28 @@ class CatalogRemap:
         cap = self.max_items - (1 if self.overflow == "clamp" else 0)
         return len(self._raw) < cap
 
-    def apply(self, chunk: np.ndarray) -> np.ndarray:
+    @property
+    def item_sizes(self) -> np.ndarray:
+        """Per-dense-id sizes (bytes), unit default for never-sized ids."""
+        out = np.ones(len(self), np.float64)
+        for d, s in self._sizes.items():
+            out[d] = s
+        return out
+
+    def apply(
+        self, chunk: np.ndarray, sizes: Optional[np.ndarray] = None
+    ) -> np.ndarray:
         """Remap one chunk of raw ids to dense ids (possibly shorter under
-        ``overflow="drop"``)."""
+        ``overflow="drop"``); ``sizes`` records per-item first-seen sizes."""
         chunk = np.asarray(chunk, dtype=np.int64)
         if chunk.ndim != 1:
             raise ValueError("CatalogRemap.apply expects a 1-D id chunk")
+        if sizes is not None:
+            sizes = np.asarray(sizes, np.float64)
+            if sizes.shape != chunk.shape:
+                raise ValueError(
+                    f"sizes shape {sizes.shape} != chunk shape {chunk.shape}"
+                )
         if chunk.size == 0:
             return chunk.copy()
         # per-chunk vectorization: resolve each distinct raw id once
@@ -118,6 +142,13 @@ class CatalogRemap:
                         self._bucket = self.max_items - 1
                     dense = self._bucket
                 vals[j] = dense
+        if sizes is not None:
+            # first-seen-size rule, in stream order (first_idx), skipping
+            # dropped requests and the shared clamp bucket
+            for j in np.argsort(first_idx, kind="stable"):
+                d = int(vals[j])
+                if d >= 0 and d != self._bucket and d not in self._sizes:
+                    self._sizes[d] = float(sizes[first_idx[j]])
         mapped = vals[inv]
         if self.overflow == "drop":
             keep = mapped >= 0
@@ -127,10 +158,17 @@ class CatalogRemap:
             self.clamped += int(np.sum(mapped == self._bucket))
         return mapped
 
-    def remap(self, chunks: Iterable[np.ndarray]) -> Iterator[np.ndarray]:
-        """Lift :meth:`apply` over a chunk iterator (skips emptied chunks)."""
+    def remap(self, chunks: Iterable) -> Iterator[np.ndarray]:
+        """Lift :meth:`apply` over a chunk iterator (skips emptied chunks).
+
+        Accepts plain id chunks or the ``(ids, sizes)`` pairs yielded by
+        ``open_trace(..., with_sizes=True)`` — sizes are recorded into
+        :attr:`item_sizes` and the densified id chunks are yielded."""
         for chunk in chunks:
-            out = self.apply(chunk)
+            if isinstance(chunk, tuple):
+                out = self.apply(chunk[0], sizes=chunk[1])
+            else:
+                out = self.apply(chunk)
             if out.size:
                 yield out
 

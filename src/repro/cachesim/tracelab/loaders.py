@@ -37,11 +37,14 @@ DEFAULT_CHUNK = 1 << 16
 
 _INT64_MAX = np.iinfo(np.int64).max
 
-#: format name -> (kind, default options) — the loader dispatch table
+#: format name -> (kind, default options) — the loader dispatch table.
+#: ``size_col`` is where the object size (bytes) lives: the twitter-style
+#: csv puts ``value_size`` fourth (``timestamp,key,key_size,value_size``),
+#: the tsv/cdn logs put it right after the id (``timestamp id size``).
 TRACE_FORMATS = {
-    "csv": {"delimiter": ",", "id_col": 1},
-    "tsv": {"delimiter": "\t", "id_col": 1},
-    "cdn": {"delimiter": None, "id_col": 1},  # None = any whitespace
+    "csv": {"delimiter": ",", "id_col": 1, "size_col": 3},
+    "tsv": {"delimiter": "\t", "id_col": 1, "size_col": 2},
+    "cdn": {"delimiter": None, "id_col": 1, "size_col": 2},  # None = any ws
     "bin32": {"dtype": np.uint32},
     "bin64": {"dtype": np.uint64},
 }
@@ -97,7 +100,8 @@ def _iter_text(
     on_bad: str,
     header: str,
     key_mode: str,
-) -> Iterator[np.ndarray]:
+    size_col: Optional[int] = None,
+) -> Iterator:
     if on_bad not in ("raise", "skip"):
         raise ValueError(f"on_bad must be 'raise' or 'skip', got {on_bad!r}")
     if header not in ("auto", "none", "skip"):
@@ -112,6 +116,7 @@ def _iter_text(
             "files) explicitly"
         )
     buf: list = []
+    sbuf: list = []
     with open(path, "r", encoding="utf-8", errors="replace") as f:
         for lineno, line in enumerate(f, 1):
             line = line.strip()
@@ -121,8 +126,13 @@ def _iter_text(
                 continue
             parts = line.split(delimiter)
             bad = None
-            if len(parts) <= id_col:
-                bad = f"{len(parts)} field(s), id column is {id_col}"
+            need = id_col if size_col is None else max(id_col, size_col)
+            if len(parts) <= need:
+                bad = (
+                    f"{len(parts)} field(s), id column is {id_col}"
+                    if len(parts) <= id_col
+                    else f"{len(parts)} field(s), size column is {size_col}"
+                )
             else:
                 try:
                     v = _parse_id(parts[id_col], key_mode)
@@ -132,6 +142,13 @@ def _iter_text(
                     raise ValueError(f"{path}:{lineno}: {e}") from None
                 except ValueError as e:
                     bad = str(e) or f"unparseable id {parts[id_col]!r}"
+                if bad is None and size_col is not None:
+                    try:
+                        sz = float(parts[size_col])
+                    except ValueError:
+                        sz = float("nan")
+                    if not (sz > 0.0 and np.isfinite(sz)):
+                        bad = f"unparseable size {parts[size_col]!r}"
             if bad is not None:
                 if lineno == 1 and header == "auto":
                     continue  # a header row is the one expected bad first line
@@ -139,11 +156,22 @@ def _iter_text(
                     raise ValueError(f"{path}:{lineno}: bad trace line ({bad})")
                 continue
             buf.append(v)
+            if size_col is not None:
+                sbuf.append(sz)
             if len(buf) >= chunk_size:
-                yield np.asarray(buf, dtype=np.int64)
+                ids = np.asarray(buf, dtype=np.int64)
+                if size_col is not None:
+                    yield ids, np.asarray(sbuf, dtype=np.float64)
+                    sbuf = []
+                else:
+                    yield ids
                 buf = []
     if buf:
-        yield np.asarray(buf, dtype=np.int64)
+        ids = np.asarray(buf, dtype=np.int64)
+        if size_col is not None:
+            yield ids, np.asarray(sbuf, dtype=np.float64)
+        else:
+            yield ids
 
 
 def _iter_binary(
@@ -177,7 +205,9 @@ def open_trace(
     on_bad: str = "raise",
     header: str = "auto",
     key_mode: str = "int",
-) -> Iterator[np.ndarray]:
+    with_sizes: bool = False,
+    size_col: Optional[int] = None,
+) -> Iterator:
     """Open an on-disk trace as a chunk iterator of raw int64 ids.
 
     ``format`` defaults to :func:`sniff_format` on the extension.  Text
@@ -187,6 +217,15 @@ def open_trace(
     ``"none"`` treats it as data) and ``key_mode`` (``"int"`` or ``"hash"``
     for anonymized string keys).  Chunk boundaries never change the loaded
     stream: any ``chunk_size`` concatenates to the same trace.
+
+    ``with_sizes=True`` additionally parses the per-request object size
+    (bytes) from each format's size column (``size_col`` overrides; see
+    ``TRACE_FORMATS``) and yields ``(ids, sizes)`` pairs — ``sizes`` is
+    float64, validated positive and finite, with malformed sizes following
+    ``on_bad`` like any other bad line.  The CDN/storage logs carry real
+    sizes in exactly this column; dropping it silently was a bug — a
+    byte-hit evaluation on a "loaded" CDN trace was actually unit-size.
+    Binary formats carry ids only and reject ``with_sizes``.
     """
     if chunk_size <= 0:
         raise ValueError(f"chunk_size must be positive, got {chunk_size}")
@@ -199,6 +238,11 @@ def open_trace(
     if "dtype" in opts:
         if key_mode != "int":
             raise ValueError("key_mode applies to text formats only")
+        if with_sizes:
+            raise ValueError(
+                f"format {fmt!r} is a raw id stream with no size column; "
+                "with_sizes needs a text format (csv/tsv/cdn)"
+            )
         return _iter_binary(path, opts["dtype"], chunk_size)
     return _iter_text(
         path,
@@ -208,42 +252,81 @@ def open_trace(
         on_bad,
         header,
         key_mode,
+        size_col=(
+            (size_col if size_col is not None else opts["size_col"])
+            if with_sizes
+            else None
+        ),
     )
 
 
-def load_trace(path: str, format: Optional[str] = None, **kw) -> np.ndarray:
+def load_trace(path: str, format: Optional[str] = None, **kw):
     """One-shot load: :func:`open_trace` chunks concatenated (small files /
-    tests; streaming callers should keep the iterator)."""
+    tests; streaming callers should keep the iterator).  With
+    ``with_sizes=True`` returns an ``(ids, sizes)`` pair instead of ids."""
     chunks = list(open_trace(path, format, **kw))
+    if kw.get("with_sizes"):
+        if not chunks:
+            return np.empty(0, np.int64), np.empty(0, np.float64)
+        return (
+            np.concatenate([c[0] for c in chunks]),
+            np.concatenate([c[1] for c in chunks]),
+        )
     if not chunks:
         return np.empty(0, dtype=np.int64)
     return np.concatenate(chunks)
 
 
-def write_trace(path: str, ids, format: Optional[str] = None) -> str:
+def write_trace(
+    path: str, ids, format: Optional[str] = None, *, sizes=None
+) -> str:
     """Write ids to ``path`` in any supported format (fixtures/round-trips).
 
-    Text formats get synthetic ``timestamp``/``size`` companion columns (the
-    loaders only read the id column back).  ``bin32`` rejects ids that don't
-    fit uint32 rather than silently wrapping.
+    Text formats get a synthetic ``timestamp`` column and a ``size`` column
+    — per-request ``sizes`` when given (preserved bit-for-float through a
+    ``with_sizes=True`` round-trip; integral values are written as
+    integers), else the unit-size placeholder ``1``.  Binary formats carry
+    ids only and reject ``sizes``.  ``bin32`` rejects ids that don't fit
+    uint32 rather than silently wrapping.
     """
     ids = np.asarray(ids, dtype=np.int64)
     if ids.ndim != 1:
         raise ValueError("write_trace expects a 1-D id array")
     if ids.size and ids.min() < 0:
         raise ValueError("negative item ids")
+    if sizes is not None:
+        sizes = np.asarray(sizes, np.float64)
+        if sizes.shape != ids.shape:
+            raise ValueError(
+                f"sizes shape {sizes.shape} != ids shape {ids.shape}"
+            )
+        if sizes.size and not (
+            np.all(np.isfinite(sizes)) and float(sizes.min()) > 0.0
+        ):
+            raise ValueError("sizes must be finite and > 0")
     fmt = format or sniff_format(path)
-    if fmt == "bin32":
-        if ids.size and ids.max() > np.iinfo(np.uint32).max:
-            raise ValueError("id overflows uint32; use bin64")
-        ids.astype(np.uint32).tofile(path)
-    elif fmt == "bin64":
-        ids.astype(np.uint64).tofile(path)
+    if fmt in ("bin32", "bin64"):
+        if sizes is not None:
+            raise ValueError(
+                f"format {fmt!r} is a raw id stream and cannot carry sizes"
+            )
+        if fmt == "bin32":
+            if ids.size and ids.max() > np.iinfo(np.uint32).max:
+                raise ValueError("id overflows uint32; use bin64")
+            ids.astype(np.uint32).tofile(path)
+        else:
+            ids.astype(np.uint64).tofile(path)
     elif fmt in ("csv", "tsv", "cdn"):
         sep = {"csv": ",", "tsv": "\t", "cdn": " "}[fmt]
+        pad = sep + "0" if fmt == "csv" else ""  # csv size col is 4th
         with open(path, "w", encoding="utf-8") as f:
             for t, v in enumerate(ids.tolist()):
-                f.write(f"{t}{sep}{v}{sep}1\n")
+                if sizes is None:
+                    s = "1"
+                else:
+                    sz = float(sizes[t])
+                    s = str(int(sz)) if sz == int(sz) else repr(sz)
+                f.write(f"{t}{sep}{v}{pad}{sep}{s}\n")
     else:
         raise ValueError(
             f"unknown trace format {fmt!r}; have {sorted(TRACE_FORMATS)}"

@@ -54,6 +54,8 @@ def run_stream(
     eta: Optional[float] = None,
     horizon: Optional[int] = None,
     n_slots: Optional[int] = None,
+    sizes: Optional[np.ndarray] = None,
+    costs: Optional[np.ndarray] = None,
     opt_window: Optional[int] = None,
     keep_carry: bool = True,
     name: Optional[str] = None,
@@ -84,7 +86,14 @@ def run_stream(
 
     Pass ``carry=`` to resume a previous stream's final carry; as with
     ``api.run``, the carry holds every policy parameter, so
-    ``seed``/``eta``/``horizon``/``n_slots`` must not be re-passed.
+    ``seed``/``eta``/``horizon``/``n_slots``/``costs`` must not be
+    re-passed (``sizes`` may be: it also drives the host-side byte
+    accounting).
+
+    ``sizes``/``costs`` are per-*item* arrays passed through to
+    ``api.run`` — sized policies shape decisions with them and results
+    gain ``byte_hits``/``bytes_total`` (ingest per-request sizes with
+    ``open_trace(..., with_sizes=True)`` + ``CatalogRemap.item_sizes``).
     """
     if window <= 0:
         raise ValueError(f"window must be positive, got {window}")
@@ -123,13 +132,16 @@ def run_stream(
         or horizon is not None
         or n_slots is not None
         or seed != 0
+        or costs is not None
     ):
         raise ValueError(
             "run_stream(carry=...) resumes with the carry's parameters; do "
-            "not pass seed/eta/horizon/n_slots alongside a carry"
+            "not pass seed/eta/horizon/n_slots/costs alongside a carry"
         )
 
     reward, hits, aux, occupancy = [], [], [], []
+    byte_hits: list = []
+    bytes_total = 0.0
     dyn_opt: list = []
     opt_buf: list = []
     opt_buffered = 0
@@ -140,12 +152,12 @@ def run_stream(
     t0 = time.perf_counter()
 
     def _flush_segment(seg: np.ndarray):
-        nonlocal carry, n_segments, t_used, opt_buffered
-        run_kw = dict(window=window, track_opt=False, name=name)
+        nonlocal carry, n_segments, t_used, opt_buffered, bytes_total
+        run_kw = dict(window=window, track_opt=False, name=name, sizes=sizes)
         if carry is None:
             res = api.run(
                 pd, seg, catalog_size, capacity, seed=seed, eta=eta,
-                horizon=horizon, n_slots=n_slots, **run_kw,
+                horizon=horizon, n_slots=n_slots, costs=costs, **run_kw,
             )
             extras.update(res.extras)
         else:
@@ -155,6 +167,9 @@ def run_stream(
         hits.append(res.hits)
         aux.append(res.aux)
         occupancy.append(res.occupancy)
+        if res.byte_hits is not None:
+            byte_hits.append(res.byte_hits)
+        bytes_total += res.bytes_total
         n_segments += 1
         t_used += res.T
         if opt_window is not None:
@@ -225,6 +240,12 @@ def run_stream(
         carry=carry if keep_carry else None,
         wall_seconds=wall,
         extras=extras,
+        byte_hits=(
+            np.concatenate(byte_hits)
+            if len(byte_hits) == n_segments and n_segments
+            else None
+        ),
+        bytes_total=bytes_total,
         dyn_opt_hits=(
             np.asarray(dyn_opt, np.float64) if opt_window is not None else None
         ),

@@ -39,6 +39,8 @@ BLOCK = 8192
 _POP_BINS = 64
 _REUSE_SAMPLE = 200_000
 _DRIFT_SIM_THRESHOLD = 0.5
+#: popularity-rank bins of the fitted size--popularity joint
+_SIZE_BINS = 8
 
 
 @dataclass(frozen=True)
@@ -62,6 +64,17 @@ class TraceProfile:
     reuse_q: np.ndarray = field(
         default_factory=lambda: np.empty(0, np.float64)
     )  # source reuse-distance quantiles (calibration reference)
+    #: size--popularity joint: per popularity-rank bin, the lognormal
+    #: (log-mean, log-std) of item sizes in that bin.  Empty = unsized fit.
+    size_logmu: np.ndarray = field(
+        default_factory=lambda: np.empty(0, np.float64)
+    )  # (J,) log-mean item size per rank bin
+    size_logsd: np.ndarray = field(
+        default_factory=lambda: np.empty(0, np.float64)
+    )  # (J,) log-std item size per rank bin
+    size_rank_bins: np.ndarray = field(
+        default_factory=lambda: np.empty(0, np.float64)
+    )  # (J+1,) rank-bin edges as fractions in [0, 1]
 
 
 def _segment_drift_phase(trace: np.ndarray) -> int:
@@ -93,14 +106,58 @@ def _segment_drift_phase(trace: np.ndarray) -> int:
     return 0
 
 
+def _fit_size_joint(trace: np.ndarray, sizes: np.ndarray):
+    """Lognormal item-size fit per popularity-rank bin.
+
+    An item's size is its first-seen request size; items are ranked by
+    request count (descending, stable) and grouped into ``_SIZE_BINS``
+    log-spaced rank bins — dense at the head, where size--popularity
+    correlation (small-hot vs large-cold CDN objects) matters most."""
+    sizes = np.asarray(sizes, np.float64)
+    if sizes.shape != trace.shape:
+        raise ValueError(
+            f"sizes shape {sizes.shape} != trace shape {trace.shape}"
+        )
+    if not (np.all(np.isfinite(sizes)) and float(sizes.min()) > 0.0):
+        raise ValueError("sizes must be finite and > 0")
+    _, first_idx, cnt = np.unique(
+        trace, return_index=True, return_counts=True
+    )
+    item_logsz = np.log(sizes[first_idx])
+    order = np.argsort(-cnt, kind="stable")
+    ranked = item_logsz[order]
+    u = len(ranked)
+    j = min(_SIZE_BINS, u)
+    edges = np.unique(
+        np.round(np.geomspace(1, u, j + 1) - 1).astype(np.int64)
+    )
+    if len(edges) < 2:
+        edges = np.asarray([0, u], dtype=np.int64)
+    edges[0], edges[-1] = 0, u
+    mu = np.empty(len(edges) - 1)
+    sd = np.empty(len(edges) - 1)
+    for q in range(len(edges) - 1):
+        seg = ranked[edges[q] : max(edges[q + 1], edges[q] + 1)]
+        if seg.size == 0:  # guard: geomspace edge collisions are deduped
+            seg = ranked[-1:]
+        mu[q] = float(seg.mean())
+        sd[q] = float(seg.std())
+    return mu, sd, edges.astype(np.float64) / u
+
+
 def fit_profile(
     trace: np.ndarray,
     *,
+    sizes: Optional[np.ndarray] = None,
     burst_span: int = 100,
     bins: int = _POP_BINS,
 ) -> TraceProfile:
     """Measure the synthesis statistics of a trace (sparse raw ids are fine
-    — everything routes through the sparse-safe :func:`trace_stats`)."""
+    — everything routes through the sparse-safe :func:`trace_stats`).
+
+    ``sizes`` (per-request bytes, e.g. from ``open_trace(...,
+    with_sizes=True)``) additionally fits the size--popularity joint, which
+    :func:`synthesize_sizes` reproduces for the synthesized catalog."""
     trace = np.asarray(trace, dtype=np.int64)
     t_len = len(trace)
     if t_len == 0:
@@ -147,6 +204,11 @@ def fit_profile(
         else np.empty(0, np.float64)
     )
 
+    if sizes is not None:
+        s_mu, s_sd, s_bins = _fit_size_joint(trace, sizes)
+    else:
+        s_mu = s_sd = s_bins = np.empty(0, np.float64)
+
     return TraceProfile(
         catalog=int(stats.unique),
         pop_cdf=pop_cdf,
@@ -159,7 +221,23 @@ def fit_profile(
         drift_phase=_segment_drift_phase(trace),
         source_T=t_len,
         reuse_q=reuse_q,
+        size_logmu=s_mu,
+        size_logsd=s_sd,
+        size_rank_bins=s_bins,
     )
+
+
+def _base_split(profile: TraceProfile, catalog: int) -> int:
+    """Base/overlay catalog split: overlay needs a pool of short-lived ids;
+    tiny catalogs (< 8) give everything to the base popularity model."""
+    n_base = catalog
+    if catalog >= 8 and profile.base_item_frac < 1.0:
+        n_base = int(np.clip(
+            round(catalog * max(profile.base_item_frac, 0.05)),
+            1,
+            catalog - 1,
+        ))
+    return n_base
 
 
 def _phase_perm(n_base: int, seed: int, phase: int) -> np.ndarray:
@@ -272,15 +350,7 @@ def synthesize_chunks(
     catalog = int(catalog if catalog is not None else profile.catalog)
     if catalog < 1:
         raise ValueError(f"catalog must be >= 1, got {catalog}")
-    # base/overlay split: overlay needs a pool of short-lived ids; tiny
-    # catalogs (< 8) give everything to the base popularity model
-    n_base = catalog
-    if catalog >= 8 and profile.base_item_frac < 1.0:
-        n_base = int(np.clip(
-            round(catalog * max(profile.base_item_frac, 0.05)),
-            1,
-            catalog - 1,
-        ))
+    n_base = _base_split(profile, catalog)
 
     perm_cache: dict = {}
     buf: list = []
@@ -299,6 +369,46 @@ def synthesize_chunks(
             buffered = rest.size
     if buffered:
         yield np.concatenate(buf) if len(buf) > 1 else buf[0]
+
+
+def synthesize_sizes(
+    profile: TraceProfile,
+    *,
+    catalog: Optional[int] = None,
+    seed: int = 0,
+) -> np.ndarray:
+    """Per-item sizes (bytes) reproducing the fitted size--popularity joint.
+
+    Returns a ``(catalog,)`` array aligned with the item ids that
+    :func:`synthesize_chunks` emits for the same ``(profile, catalog,
+    seed)``: each popularity rank draws from its rank bin's fitted
+    lognormal, and ranks map to item ids through the phase-0 base
+    permutation (under drift, later phases re-rank items while their sizes
+    stay fixed — sizes are a per-object property).  Overlay-pool items
+    (one-shots/bursts) draw from the tail bin.  An unsized profile yields
+    unit sizes, so the pairing is always safe to use."""
+    catalog = int(catalog if catalog is not None else profile.catalog)
+    if catalog < 1:
+        raise ValueError(f"catalog must be >= 1, got {catalog}")
+    if profile.size_logmu.size == 0:
+        return np.ones(catalog, np.float64)
+    rng = np.random.default_rng([seed, 0x512E])
+    frac = (np.arange(catalog, dtype=np.float64) + 0.5) / catalog
+    q = np.clip(
+        np.searchsorted(profile.size_rank_bins, frac, side="right") - 1,
+        0,
+        len(profile.size_logmu) - 1,
+    )
+    by_rank = np.exp(
+        profile.size_logmu[q] + profile.size_logsd[q] * rng.standard_normal(
+            catalog
+        )
+    )
+    n_base = _base_split(profile, catalog)
+    out = np.empty(catalog, np.float64)
+    out[_phase_perm(n_base, seed, 0)] = by_rank[:n_base]
+    out[n_base:] = by_rank[n_base:]
+    return out
 
 
 def synthesize(

@@ -148,10 +148,13 @@ def init_tree_lru_carry(catalog_size: int, capacity: int,
 
 
 @functools.lru_cache(maxsize=None)
-def make_lru_tree_chunk(catalog_size: int, m: int):
+def make_lru_tree_chunk(catalog_size: int, m: int,
+                        return_flags: bool = False):
     """Chunk step ``(carry, ids(window,)) -> (carry, (hits, occ))`` for the
     reuse-distance engine; the sub-chunk width W is derived from the traced
-    chunk shape, so one factory serves every window."""
+    chunk shape, so one factory serves every window.  ``return_flags=True``
+    replaces the hit count with the (window,) per-request flags (the inner
+    scan's (n_sub, w) flag rows, flattened back to request order)."""
     radix = RING_RADIX
     sh = radix.bit_length() - 1
     offs = pt.tree_offsets(m, radix)
@@ -283,6 +286,8 @@ def make_lru_tree_chunk(catalog_size: int, m: int):
         tree = tree.at[pn].add(pd)
         last = last.at[pli].max(plv)
         out = TreeLRUCarry(tree, last, pos, nseen, cap)
+        if return_flags:
+            return out, (hits.reshape(-1), jnp.minimum(nseen, cap))
         nhits = jnp.sum(hits.astype(jnp.int32))
         return out, (nhits, jnp.minimum(nseen, cap))
 
@@ -350,21 +355,26 @@ def init_tree_ftpl_carry(catalog_size: int, capacity: int,
     )
 
 
-def _wrap_pend_chunk(substep, pack, unpack):
+def _wrap_pend_chunk(substep, pack, unpack, return_flags: bool = False):
     """Build ``chunk(carry, ids)`` from a delayed-write per-request substep:
-    pending writes ride the inner carry and are flushed before returning."""
+    pending writes ride the inner carry and are flushed before returning.
+    ``return_flags=True`` emits the per-request hit flags instead of their
+    sum (the sized runs weight each hit by the requested item's bytes)."""
 
     def chunk(carry, ids):
         st = pack(carry)
         st, hits = jax.lax.scan(substep, st, ids)
         carry = unpack(st)
+        if return_flags:
+            return carry, hits
         return carry, jnp.sum(hits.astype(jnp.int32))
 
     return chunk
 
 
 @functools.lru_cache(maxsize=None)
-def make_lfu_tree_chunk(catalog_size: int, k: int):
+def make_lfu_tree_chunk(catalog_size: int, k: int,
+                        return_flags: bool = False):
     n = catalog_size
     radix = SLOT_RADIX
     offs = pt.tree_offsets(k, radix)
@@ -422,11 +432,12 @@ def make_lfu_tree_chunk(catalog_size: int, k: int):
         tl = tl.at[pti].set(ptl)
         return TreeLFUCarry(imap, counts, slots, th, tl, t)
 
-    return _wrap_pend_chunk(substep, pack, unpack)
+    return _wrap_pend_chunk(substep, pack, unpack, return_flags)
 
 
 @functools.lru_cache(maxsize=None)
-def make_ftpl_tree_chunk(catalog_size: int, k: int):
+def make_ftpl_tree_chunk(catalog_size: int, k: int,
+                         return_flags: bool = False):
     n = catalog_size
     radix = SLOT_RADIX
     offs = pt.tree_offsets(k, radix)
@@ -486,7 +497,138 @@ def make_ftpl_tree_chunk(catalog_size: int, k: int):
         tl = tl.at[pti].set(ptl)
         return TreeFTPLCarry(imap, counts, noise, slots, th, tl)
 
-    return _wrap_pend_chunk(substep, pack, unpack)
+    return _wrap_pend_chunk(substep, pack, unpack, return_flags)
+
+
+# ---------------------------------------------------------------------------
+# tree-GDS: GreedyDual-Size on the min-pair eviction trees
+# ---------------------------------------------------------------------------
+class TreeGDSCarry(NamedTuple):
+    """GreedyDual-Size (Cao & Irani 1997) automaton state.
+
+    Size-normalized eviction keys: every resident item carries a priority
+    H_i = L + cost_i / size_i where L is the global inflation value (the
+    last evicted item's H), so small/costly objects survive longer.  The
+    victim search is the same lexicographic min-pair tree as LFU/FTPL with
+    (sortable H, item id) keys — the id tie-break matches the host oracle's
+    sorted-store ``(key, item)`` ordering.  Capacity is slot-based (like
+    the host ``core.policies.GDS``); sizes shape the *priorities* and the
+    byte-hit accounting, not the occupancy constraint.
+    """
+
+    imap: jax.Array  # (N+1,) int32 item -> slot (-1 out; N is scratch)
+    hval: jax.Array  # (K,) float32 slot -> current H (reads L back as float)
+    L: jax.Array  # () float32 global inflation value
+    prio: jax.Array  # (N,) float32 per-item cost_i / size_i increments
+    szs: jax.Array  # (N,) float32 per-item sizes (byte accounting; 1 = unit)
+    slots: jax.Array  # (K,) int32 slot -> item (-1 empty, -2 inactive)
+    tree_hi: jax.Array  # (TOT,) int32 min-tree over sortable H
+    tree_lo: jax.Array  # (TOT,) int32 min-tree over slot item ids
+
+
+def init_tree_gds_carry(
+    catalog_size: int,
+    capacity: int,
+    n_slots: Optional[int] = None,
+    *,
+    sizes: Optional[np.ndarray] = None,
+    costs: Optional[np.ndarray] = None,
+) -> TreeGDSCarry:
+    n = int(catalog_size)
+    k = int(n_slots) if n_slots else int(capacity)
+    c = int(capacity)
+    s = np.ones(n, np.float32) if sizes is None else np.asarray(
+        sizes, np.float32
+    )
+    w = np.ones(n, np.float32) if costs is None else np.asarray(
+        costs, np.float32
+    )
+    if s.shape != (n,) or w.shape != (n,):
+        raise ValueError(f"sizes/costs must be ({n},) arrays")
+    if not (np.all(np.isfinite(s)) and s.min() > 0.0):
+        raise ValueError("gds sizes must be finite and > 0")
+    if not (np.all(np.isfinite(w)) and w.min() > 0.0):
+        raise ValueError("gds costs must be finite and > 0")
+    hi = np.full(k, _I32_MAX, np.int32)
+    lo = np.full(k, _I32_MAX, np.int32)
+    hi[:c] = -1  # empty slots sort below any real H (sortable(H>0) > 0)
+    lo[:c] = -1
+    th, tl = pt.minpair_build(jnp.asarray(hi), jnp.asarray(lo), SLOT_RADIX)
+    slots = np.full(k, -2, np.int32)
+    slots[:c] = -1
+    return TreeGDSCarry(
+        imap=jnp.full(n + 1, -1, jnp.int32),
+        hval=jnp.zeros(k, jnp.float32),
+        L=jnp.zeros((), jnp.float32),
+        prio=jnp.asarray(w / s),
+        szs=jnp.asarray(s),
+        slots=jnp.asarray(slots),
+        tree_hi=th,
+        tree_lo=tl,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def make_gds_tree_chunk(catalog_size: int, k: int,
+                        return_flags: bool = False):
+    n = catalog_size
+    radix = SLOT_RADIX
+    offs = pt.tree_offsets(k, radix)
+
+    def substep(st, j):
+        (imap, hval, L, prio, szs, slots, th, tl,
+         pii, piv, psi, psv, phi, phv, pti, pth, ptl) = st
+        imap = imap.at[pii].set(piv)
+        slots = slots.at[psi].set(psv)
+        hval = hval.at[phi].set(phv)
+        th = th.at[pti].set(pth)
+        tl = tl.at[pti].set(ptl)
+
+        slot = imap[j]
+        hit = slot >= 0
+        victim = pt.minpair_argmin(th, tl, k, radix).astype(jnp.int32)
+        idx = jnp.where(hit, slot, victim)
+        old = slots[idx]
+        # host order: evict first (L <- H_min of a *real* victim), then
+        # key the newcomer off the updated L.  Empty-slot fills and hits
+        # leave L unchanged.
+        evict = jnp.logical_and(~hit, old >= 0)
+        L = jnp.where(evict, hval[idx], L)
+        h = L + prio[j]
+        pti, pth, ptl = pt.minpair_update_plan(
+            th, tl, k, radix, idx, pt.sortable_f32(h), j
+        )
+        psi, psv = idx, j
+        phi, phv = idx, h
+        mo = jnp.where(evict, old, n)  # n: scratch index
+        pii = jnp.stack([mo, j])
+        piv = jnp.stack([jnp.int32(-1), idx])
+        st = (imap, hval, L, prio, szs, slots, th, tl,
+              pii, piv, psi, psv, phi, phv, pti, pth, ptl)
+        return st, hit
+
+    def pack(c: TreeGDSCarry):
+        return (
+            c.imap, c.hval, c.L, c.prio, c.szs, c.slots,
+            c.tree_hi, c.tree_lo,
+            jnp.full(2, n, jnp.int32), jnp.full(2, -1, jnp.int32),
+            jnp.zeros((), jnp.int32), c.slots[0],
+            jnp.zeros((), jnp.int32), c.hval[0],
+            jnp.asarray(offs, jnp.int32), c.tree_hi[jnp.asarray(offs)],
+            c.tree_lo[jnp.asarray(offs)],
+        )
+
+    def unpack(st):
+        (imap, hval, L, prio, szs, slots, th, tl,
+         pii, piv, psi, psv, phi, phv, pti, pth, ptl) = st
+        imap = imap.at[pii].set(piv)
+        slots = slots.at[psi].set(psv)
+        hval = hval.at[phi].set(phv)
+        th = th.at[pti].set(pth)
+        tl = tl.at[pti].set(ptl)
+        return TreeGDSCarry(imap, hval, L, prio, szs, slots, th, tl)
+
+    return _wrap_pend_chunk(substep, pack, unpack, return_flags)
 
 
 # ---------------------------------------------------------------------------
@@ -726,6 +868,324 @@ def make_ogb_tree_chunk(catalog_size: int, v: int, radix: int, sample: str,
 
 
 # ---------------------------------------------------------------------------
+# sized OGB: per-size-class bucket trees, O(K * B log V) per chunk
+# ---------------------------------------------------------------------------
+#: default number of size (slab) classes the sized tree flavor quantizes to
+SIZED_OGB_CLASSES = 16
+
+
+class SizedOGBTreeCarry(NamedTuple):
+    """Lazy *weighted* OGB state over K size classes (paper §8 setting).
+
+    The knapsack-relaxed projection onto {f : sum_i s_i f_i = C} is
+    f_i = clip(y_i - s_k * rho, 0, 1) for item i in size class k — the
+    uniform-subtraction trick generalizes per class, so the unit-size
+    bucket-histogram solve becomes K stacked histograms, one per slab
+    class, each with a class-scaled bucket width w_k = s_k * wb (uniform
+    rho resolution across classes).  A chunk touches O(K * B log V) tree
+    nodes; the catalog is only visited on re-anchor.
+
+    Sizes/costs are pre-normalized by the mean slab size (``sref``), so
+    uniform sizes reduce to the unit ``ogb_tree`` dynamics at the same
+    eta; byte outputs are scaled back by ``sref``.
+    """
+
+    y: jax.Array  # (N,) float32 accumulated values
+    rho: jax.Array  # () float32 cumulative base multiplier
+    eta: jax.Array  # () float32
+    cap: jax.Array  # () float32 capacity in normalized bytes
+    cls: jax.Array  # (N,) int32 item -> size class
+    s: jax.Array  # (K,) float32 normalized class sizes
+    wts: jax.Array  # (N,) float32 normalized gradient weights (costs)
+    sref: jax.Array  # () float32 bytes per normalized size unit
+    wmax: jax.Array  # () float32 max gradient weight (re-anchor headroom)
+    p: jax.Array  # (N,) float32 permanent random numbers, or (0,)
+    wb: jax.Array  # () float32 base bucket width (class k: s_k * wb)
+    scratch: jax.Array  # (N,) int32 first-occurrence dedup scratch
+    ycnt: jax.Array  # (K, TOT) float32 per-class bucket-count trees
+    ysum: jax.Array  # (K, TOT) float32 per-class bucket-sum trees
+    dcnt: jax.Array  # (K, TOT) float32 trees over y - p, or (0, TOT)
+
+
+def _stacked_tree_update(trees, v: int, radix: int, rows, idx, delta):
+    """Batched point update on stacked per-class trees ``(K, TOT)``:
+    add ``delta[q]`` along the ancestor path of leaf ``idx[q]`` in the
+    class-``rows[q]`` tree; ``idx < 0`` entries are skipped."""
+    kk, tot = trees.shape
+    offs = pt.tree_offsets(v, radix)
+    sh = radix.bit_length() - 1
+    ok = idx >= 0
+    node = jnp.where(ok, idx, 0)
+    row = jnp.where(ok, rows, 0) * tot
+    nodes, deltas = [], []
+    zero = jnp.zeros((), delta.dtype)
+    for off in offs:
+        nodes.append(row + off + node)
+        deltas.append(jnp.where(ok, delta, zero))
+        node = node >> sh
+    flat = trees.reshape(-1).at[jnp.concatenate(nodes)].add(
+        jnp.concatenate(deltas)
+    )
+    return flat.reshape(kk, tot)
+
+
+def init_sized_ogb_tree_carry(
+    catalog_size: int,
+    capacity: float,
+    *,
+    sizes: np.ndarray,
+    costs: Optional[np.ndarray] = None,
+    eta: float,
+    seed: int = 0,
+    sample: str = "poisson",
+    classes: int = SIZED_OGB_CLASSES,
+    buckets: int = OGB_TREE_BUCKETS,
+    radix: int = OGB_TREE_RADIX,
+    batch_hint: int = 4096,
+) -> SizedOGBTreeCarry:
+    """Initial carry at the uniform feasible state f = C / sum_i s_i.
+
+    ``sizes`` (bytes) are quantized to at most ``classes`` slab sizes
+    (exact when there are that few distinct sizes — see
+    :func:`repro.core.ogb_sized.size_classes`); ``costs`` default to the
+    (quantized) sizes, i.e. byte-weighted rewards w_{t,i} = s_i."""
+    from repro.cachesim.replay import sampling_keys
+    from repro.core.ogb_sized import size_classes
+
+    n, v = int(catalog_size), int(buckets)
+    s_cls, cls = size_classes(sizes, classes)  # validates sizes > 0
+    if not np.isfinite(capacity) or capacity <= 0:
+        raise ValueError(f"capacity must be finite and > 0: {capacity!r}")
+    sref = float(np.mean(s_cls[cls]))
+    s_n = (s_cls / sref).astype(np.float64)  # normalized class sizes
+    sq = s_n[cls]  # (N,) normalized per-item size
+    if costs is None:
+        w = sq.copy()
+    else:
+        w = np.asarray(costs, np.float64) / sref
+        if w.shape != (n,):
+            raise ValueError(f"costs must be a ({n},) array")
+        if not (np.all(np.isfinite(w)) and w.min() > 0.0):
+            raise ValueError("costs must be finite and > 0")
+    cap_n = float(capacity) / sref
+    total_s = float(np.sum(sq))
+    if cap_n >= total_s:
+        raise ValueError(
+            f"capacity {capacity} holds the whole catalog "
+            f"({sref * total_s:.0f} bytes); caching is trivial"
+        )
+    f0 = cap_n / total_s  # uniform feasible: sum_i s_i * f0 = cap_n
+    wmax = float(np.max(w))
+    smin = float(np.min(s_n))
+    # base grid width: class-k grids span s_k * wb * v, sized so the
+    # smallest class clears ~2*GAIN chunks of worst-case rho growth
+    wb = (2.0 / smin + 2.0 * OGB_TREE_GAIN
+          * max(1.0, float(eta) * batch_hint * wmax)) / v
+    p, _ = sampling_keys(seed, n, sample)
+    kk = len(s_n)
+    w_k = s_n * wb  # per-class bucket widths
+    by = np.clip(
+        np.floor((f0 + 1.0) / w_k[cls]), 0, v - 1
+    ).astype(np.int64)
+    flatb = cls.astype(np.int64) * v + by
+    cnt_leaf = np.bincount(flatb, minlength=kk * v).reshape(kk, v)
+    sum_leaf = (cnt_leaf * f0).astype(np.float32)
+    build = jax.vmap(lambda leaf: pt.tree_build(leaf, radix))
+    ycnt = build(jnp.asarray(cnt_leaf, jnp.float32))
+    ysum = build(jnp.asarray(sum_leaf))
+    if sample == "poisson":
+        d0 = f0 - np.asarray(p, np.float64)
+        db = np.clip(np.floor((d0 + 1.0) / w_k[cls]), 0, v - 1).astype(
+            np.int64
+        )
+        dl = np.bincount(
+            cls.astype(np.int64) * v + db, minlength=kk * v
+        ).reshape(kk, v)
+        dcnt = build(jnp.asarray(dl, jnp.float32))
+    else:
+        dcnt = jnp.zeros((0, pt.tree_storage(v, radix)), jnp.float32)
+    return SizedOGBTreeCarry(
+        y=jnp.full(n, f0, jnp.float32),
+        rho=jnp.zeros((), jnp.float32),
+        eta=jnp.float32(eta),
+        cap=jnp.float32(cap_n),
+        cls=jnp.asarray(cls, jnp.int32),
+        s=jnp.asarray(s_n, jnp.float32),
+        wts=jnp.asarray(w, jnp.float32),
+        sref=jnp.float32(sref),
+        wmax=jnp.float32(wmax),
+        p=p,
+        wb=jnp.float32(wb),
+        scratch=jnp.full(n, _I32_MAX, jnp.int32),
+        ycnt=ycnt,
+        ysum=ysum,
+        dcnt=dcnt,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def make_sized_ogb_tree_chunk(catalog_size: int, kk: int, v: int, radix: int,
+                              sample: str, iters: int = OGB_TREE_ITERS):
+    """Per-chunk sized lazy OGB step ``(carry, ids) -> (carry, (reward,
+    hits, byte_hits, drho, occ_bytes))``.
+
+    The scalar solve finds the base multiplier rho with
+
+        sum_k s_k * m_k(s_k * rho) = C,   m_k = class-k mean-clip bucket mass
+
+    by warm-bracketed safeguarded Newton: each iteration reads 2 prefix
+    sums per class (O(K log V)), the slope is sum_k s_k^2 * (interior
+    count)_k, and the bisection bracket [rho, wb * v] guards the Newton
+    proposals.  Same quantization caveats as the unit ``ogb_tree``, with
+    the bucket width scaled per class so rho resolution is uniform."""
+    poisson = sample == "poisson"
+
+    def class_mass(ycnt_k, ysum_k, wv_k, t_k):
+        """(mass, interior count) of one class at class-threshold t_k."""
+        k0 = _ogb_bucket(t_k, wv_k, v)
+        k1 = _ogb_bucket(t_k + 1.0, wv_k, v)
+        total = pt.tree_total(ycnt_k, v, radix)
+        qc = pt.tree_prefix(ycnt_k, v, radix, jnp.stack([k0, k1]))
+        qs = pt.tree_prefix(ysum_k, v, radix, jnp.stack([k0, k1]))
+        cb = jnp.stack([ycnt_k[k0], ycnt_k[k1]])
+        sb = jnp.stack([ysum_k[k0], ysum_k[k1]])
+        above = total - qc[1]
+        mid_c = qc[1] - cb[1] - qc[0]
+        mid_s = qs[1] - sb[1] - qs[0]
+        mid = mid_s - t_k * mid_c
+        mean = jnp.where(cb > 0, sb / jnp.maximum(cb, 1.0), 0.0)
+        bclip = jnp.clip(mean - t_k, 0.0, 1.0)
+        bnd = cb * bclip
+        bint = jnp.where((bclip > 0.0) & (bclip < 1.0), cb, 0.0)
+        mass = above + mid + bnd[0] + jnp.where(k1 > k0, bnd[1], 0.0)
+        interior = mid_c + bint[0] + jnp.where(k1 > k0, bint[1], 0.0)
+        return mass, interior
+
+    vclass_mass = jax.vmap(class_mass, in_axes=(0, 0, 0, 0))
+
+    def chunk(carry, ids):
+        b = ids.shape[0]
+        y, rho, eta, cap = carry.y, carry.rho, carry.eta, carry.cap
+        cls, s, wts, sref = carry.cls, carry.s, carry.wts, carry.sref
+        p, wb, scratch = carry.p, carry.wb, carry.scratch
+        ycnt, ysum, dcnt = carry.ycnt, carry.ysum, carry.dcnt
+        lanes = jnp.arange(b, dtype=jnp.int32)
+        w_k = s * wb  # (K,) per-class bucket widths
+
+        cj = cls[ids]
+        sj = s[cj]
+        wj = wts[ids]
+
+        # --- metrics at the pre-update state (OCO order) ---
+        fi = jnp.clip(y[ids] - sj * rho, 0.0, 1.0)
+        reward = jnp.sum(wj * fi)
+        if poisson:
+            hflag = fi >= p[ids]
+            hits = jnp.sum(hflag.astype(jnp.int32))
+            byte_hits = jnp.sum(jnp.where(hflag, sj, 0.0)) * sref
+            # byte occupancy: per-class suffix counts of y - p above the
+            # class threshold s_k * rho, weighted by class bytes
+            dtots = jax.vmap(lambda tr: pt.tree_total(tr, v, radix))(dcnt)
+            dpre = jax.vmap(
+                lambda tr, q: pt.tree_prefix(tr, v, radix, q[None])[0]
+            )(dcnt, _ogb_bucket(s * rho, w_k, v))
+            occ = jnp.sum(s * (dtots - dpre)) * sref
+        else:
+            hits = jnp.zeros((), jnp.int32)
+            byte_hits = jnp.zeros((), jnp.float32)
+            occ = cap * sref
+
+        # --- first-occurrence mask (dedup without sorting) ---
+        a = scratch.at[ids].min(lanes)
+        first = a[ids] == lanes
+        scratch = a.at[ids].set(_I32_MAX)
+
+        # --- gradient step: upper-clip touched, add eta * w_j per request ---
+        yold = y[ids]
+        y = y.at[ids].min(1.0 + sj * rho)
+        y = y.at[ids].add(eta * wj)
+        ynew = y[ids]
+
+        # --- move touched items between their class buckets ---
+        wvj = w_k[cj]
+        bo = jnp.where(first, _ogb_bucket(yold, wvj, v), -1)
+        bn = jnp.where(first, _ogb_bucket(ynew, wvj, v), -1)
+        rows2 = jnp.concatenate([cj, cj])
+        didx = jnp.concatenate([bo, bn])
+        ones = jnp.ones(b, jnp.float32)
+        ycnt = _stacked_tree_update(ycnt, v, radix, rows2, didx,
+                                    jnp.concatenate([-ones, ones]))
+        ysum = _stacked_tree_update(
+            ysum, v, radix, rows2, didx,
+            jnp.concatenate([
+                jnp.where(first, -yold, 0.0), jnp.where(first, ynew, 0.0)
+            ]),
+        )
+        if poisson:
+            do = jnp.where(first, _ogb_bucket(yold - p[ids], wvj, v), -1)
+            dn = jnp.where(first, _ogb_bucket(ynew - p[ids], wvj, v), -1)
+            dcnt = _stacked_tree_update(dcnt, v, radix, rows2,
+                                        jnp.concatenate([do, dn]),
+                                        jnp.concatenate([-ones, ones]))
+
+        # --- threshold solve: warm-bracketed safeguarded Newton on rho ---
+        gridtop = wb * jnp.float32(v)
+
+        def sweep_iter(_, state):
+            lo, hi, t = state
+            masses, interior = vclass_mass(ycnt, ysum, w_k, s * t)
+            mass = jnp.sum(s * masses)
+            slope = jnp.sum(s * s * interior)
+            too_much = mass >= cap
+            lo = jnp.where(too_much, t, lo)
+            hi = jnp.where(too_much, hi, t)
+            t_newton = t + (mass - cap) / jnp.maximum(slope, 1e-12)
+            t_mid = 0.5 * (lo + hi)
+            ok = jnp.logical_and(
+                slope > 0.0,
+                jnp.logical_and(t_newton > lo, t_newton < hi),
+            )
+            return lo, hi, jnp.where(ok, t_newton, t_mid)
+
+        rho_new, _, _ = jax.lax.fori_loop(
+            0, iters, sweep_iter, (rho, gridtop, rho)
+        )
+
+        # --- re-anchor when any class could outgrow its value grid ---
+        def reanchor(args):
+            y, rho_new, ycnt, ysum, dcnt = args
+            scl = s[cls]
+            y = jnp.clip(y - scl * rho_new, 0.0, 1.0)
+            wcl = w_k[cls]
+            by = _ogb_bucket(y, wcl, v)
+            onesn = jnp.ones_like(y)
+            cl = jnp.zeros((kk, v), jnp.float32).at[cls, by].add(onesn)
+            sl = jnp.zeros((kk, v), jnp.float32).at[cls, by].add(y)
+            build = jax.vmap(lambda leaf: pt.tree_build(leaf, radix))
+            ycnt = build(cl)
+            ysum = build(sl)
+            if poisson:
+                dl = jnp.zeros((kk, v), jnp.float32).at[
+                    cls, _ogb_bucket(y - p, wcl, v)
+                ].add(onesn)
+                dcnt = build(dl)
+            return y, jnp.float32(0.0), ycnt, ysum, dcnt
+
+        trig = jnp.any(
+            1.0 + s * rho_new + eta * carry.wmax * jnp.float32(b)
+            >= w_k * jnp.float32(v) - 1.0 - w_k
+        )
+        y, rho_out, ycnt, ysum, dcnt = jax.lax.cond(
+            trig, reanchor, lambda args: args, (y, rho_new, ycnt, ysum, dcnt)
+        )
+        out = carry._replace(y=y, rho=rho_out, scratch=scratch,
+                             ycnt=ycnt, ysum=ysum, dcnt=dcnt)
+        return out, (reward, hits, byte_hits, rho_new - rho, occ)
+
+    return chunk
+
+
+# ---------------------------------------------------------------------------
 # unified entry points (mirrors engines.init_engine_carry / _STEPS)
 # ---------------------------------------------------------------------------
 def init_tree_engine_carry(
@@ -746,17 +1206,22 @@ def init_tree_engine_carry(
     if kind == "ftpl":
         return init_tree_ftpl_carry(catalog_size, capacity, n_slots,
                                     seed=seed, zeta=zeta, horizon=horizon)
+    if kind == "gds":
+        return init_tree_gds_carry(catalog_size, capacity, n_slots)
     raise ValueError(
         f"unknown tree engine kind {kind!r} (have {TREE_ENGINE_KINDS})"
     )
 
 
-def make_tree_chunk(kind: str, carry):
+def make_tree_chunk(kind: str, carry, return_flags: bool = False):
     """Chunk step ``(carry, ids) -> (carry, (hits, occupancy))`` matching
-    the given carry's static geometry."""
+    the given carry's static geometry.  ``return_flags=True`` yields the
+    (window,) per-request hit flags instead of the chunk sum, so sized
+    callers can weight each hit by the requested item's bytes."""
     if kind == "lru":
         m = pt.leaves_for_storage(carry.tree.shape[0], RING_RADIX)
-        inner = make_lru_tree_chunk(carry.last.shape[0] - 1, m)
+        inner = make_lru_tree_chunk(carry.last.shape[0] - 1, m,
+                                    return_flags)
 
         def chunk(c, ids):
             c, (hits, occ) = inner(c, ids)
@@ -765,10 +1230,13 @@ def make_tree_chunk(kind: str, carry):
         return chunk
     if kind == "lfu":
         inner = make_lfu_tree_chunk(carry.imap.shape[0] - 1,
-                                    carry.slots.shape[0])
+                                    carry.slots.shape[0], return_flags)
     elif kind == "ftpl":
         inner = make_ftpl_tree_chunk(carry.imap.shape[0] - 1,
-                                     carry.slots.shape[0])
+                                     carry.slots.shape[0], return_flags)
+    elif kind == "gds":
+        inner = make_gds_tree_chunk(carry.imap.shape[0] - 1,
+                                    carry.slots.shape[0], return_flags)
     else:
         raise ValueError(f"unknown tree engine kind {kind!r}")
 

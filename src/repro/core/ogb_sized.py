@@ -39,6 +39,19 @@ def weighted_capped_simplex_tau(
     2^-iters of the bracket."""
     y = np.asarray(y, np.float64)
     s = np.asarray(sizes, np.float64)
+    if s.shape != y.shape:
+        raise ValueError(f"sizes shape {s.shape} != y shape {y.shape}")
+    if s.size == 0:
+        raise ValueError("empty y/sizes")
+    if not np.all(np.isfinite(s)) or float(np.min(s)) <= 0.0:
+        raise ValueError(
+            "sizes must be finite and > 0 (zero/negative sizes make the "
+            f"max(y/s) bracket inf/NaN); got min={np.min(s)!r}"
+        )
+    if not np.isfinite(C) or C <= 0.0:
+        raise ValueError(f"capacity C must be finite and > 0; got {C!r}")
+    if not np.all(np.isfinite(y)):
+        raise ValueError("y must be finite")
     lo = 0.0
     hi = float(np.max(y / s)) + 1.0
 
@@ -61,6 +74,38 @@ def project_weighted(y: np.ndarray, sizes: np.ndarray, C: float) -> np.ndarray:
     return np.clip(y - np.asarray(sizes, np.float64) * tau, 0.0, 1.0)
 
 
+def size_classes(
+    sizes: np.ndarray, k: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Quantize per-item sizes into at most ``k`` slab classes.
+
+    Returns ``(class_sizes (K,), item_class (N,) int32)``.  Exact (every
+    class size is an observed size) when there are <= k distinct sizes —
+    realistic caches slab-quantize anyway; otherwise geometric bins over
+    [min, max] with each class sized at the geometric mean of its members.
+    Validates sizes finite and > 0 (the weighted projection divides by
+    them)."""
+    s = np.asarray(sizes, np.float64)
+    if s.ndim != 1 or s.size == 0:
+        raise ValueError(f"sizes must be a non-empty 1-d array: {s.shape}")
+    if not np.all(np.isfinite(s)) or float(np.min(s)) <= 0.0:
+        raise ValueError(
+            f"sizes must be finite and > 0; got min={np.min(s)!r}"
+        )
+    if k < 1:
+        raise ValueError(f"need k >= 1 size classes, got {k}")
+    uniq = np.unique(s)
+    if len(uniq) <= k:
+        cls = np.searchsorted(uniq, s)
+        return uniq, cls.astype(np.int32)
+    edges = np.geomspace(uniq[0], uniq[-1], k + 1)
+    cls = np.clip(np.searchsorted(edges, s, side="right") - 1, 0, k - 1)
+    out = np.sqrt(edges[:-1] * edges[1:])  # empty classes keep bin centers
+    for j in np.unique(cls):
+        out[j] = float(np.exp(np.mean(np.log(s[cls == j]))))
+    return out, cls.astype(np.int32)
+
+
 class SizedOGB:
     """Lazy size-aware OGB over K size classes.
 
@@ -80,6 +125,12 @@ class SizedOGB:
         seed: int = 0,
     ):
         self.s = [float(x) for x in sizes_by_class]
+        if not self.s:
+            raise ValueError("need at least one size class")
+        if any(not math.isfinite(x) or x <= 0.0 for x in self.s):
+            raise ValueError(f"class sizes must be finite and > 0: {self.s}")
+        if not math.isfinite(capacity) or capacity <= 0.0:
+            raise ValueError(f"capacity must be finite and > 0: {capacity!r}")
         self.K = len(self.s)
         self.item_class = dict(item_class)
         self.C = float(capacity)
@@ -133,6 +184,11 @@ class SizedOGB:
                 (self.s[k] ** 2) * len(self.z[k]) for k in range(self.K)
             )
             if denom <= 0:
+                # every coordinate was popped: the true mass is exactly 0
+                # (clear the float drift the incremental counter carries so
+                # ``mass <= C + tol`` holds on this exit path too)
+                self.mass = 0.0
+                excess = 0.0
                 break
             dR = excess / denom
             # find the earliest-clipping coordinate across classes

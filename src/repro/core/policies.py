@@ -124,14 +124,46 @@ class LFU(_Base):
 
 class GDS(_Base):
     """Greedy-Dual-Size (unit size, unit cost ⇒ GDS reduces to LRU-with-aging;
-    we keep the H = L + cost/size machinery so non-unit weights plug in)."""
+    the H = L + cost_i/size_i machinery takes per-item ``sizes``/``costs``
+    arrays for the heterogeneous setting — this is the host oracle the
+    device tree engine (``repro.cachesim.tree_engines.TreeGDSCarry``) is
+    differential-tested against, so the tie-break on equal H is the
+    sorted-store's smallest item id, matching the device min-pair tree)."""
 
     name = "GDS"
 
-    def __init__(self, catalog_size: int, capacity: int, cost: float = 1.0, **kw):
+    def __init__(
+        self,
+        catalog_size: int,
+        capacity: int,
+        cost: float = 1.0,
+        sizes=None,
+        costs=None,
+        **kw,
+    ):
         super().__init__(catalog_size, capacity)
         self._L = 0.0
+        import numpy as _np
+
+        n = int(catalog_size)
+        s = (
+            _np.ones(n)
+            if sizes is None
+            else _np.asarray(sizes, _np.float64)
+        )
+        w = (
+            _np.full(n, float(cost))
+            if costs is None
+            else _np.asarray(costs, _np.float64)
+        )
+        if s.shape != (n,) or w.shape != (n,):
+            raise ValueError(f"sizes/costs must be ({n},) arrays")
+        if not (_np.all(_np.isfinite(s)) and float(s.min()) > 0.0):
+            raise ValueError("GDS sizes must be finite and > 0")
+        if not (_np.all(_np.isfinite(w)) and float(w.min()) > 0.0):
+            raise ValueError("GDS costs must be finite and > 0")
         self._cost = cost
+        self._prio = w / s
         self._h: Dict[int, float] = {}
         self._order = make_store("sorted")
 
@@ -150,7 +182,7 @@ class GDS(_Base):
                 hmin, imin = self._order.pop_min()
                 self._L = hmin
                 del self._h[imin]
-        h = self._L + self._cost
+        h = self._L + float(self._prio[i])
         self._h[i] = h
         self._order.insert(h, i)
         return self._account(hit)

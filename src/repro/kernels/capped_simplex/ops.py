@@ -110,3 +110,97 @@ def fused_ogb_update(
     if return_tau:
         return out, tau
     return out
+
+
+# -- weighted (knapsack) capped simplex -------------------------------------
+#
+# Sized objects (core/ogb_sized.py, paper §8): the feasible set becomes
+# F_s = {f in [0,1]^N : sum_i s_i f_i = C} and the Euclidean projection is
+# f_i = clip(y_i - s_i * tau, 0, 1) with tau the root of the weighted mass
+# g(tau) = sum_i s_i clip(y_i - s_i tau, 0, 1) = C.  g is non-increasing and
+# piecewise linear with slope -sum_{interior} s_i^2, so the same
+# bisection/safeguarded-Newton machinery applies.  These are pure-jnp element
+# -wise sweeps (same memory-bound shape as the unit kernel); the Pallas
+# fusion stays on the unit path, and the O(log N) device form lives in the
+# per-size-class bucket trees (cachesim.tree_engines.SizedOGBTreeCarry).
+
+
+def weighted_simplex_project(
+    y: jax.Array,
+    sizes: jax.Array,
+    capacity: float,
+    iters: int = 50,
+    lo: Optional[jax.Array] = None,
+    hi: Optional[jax.Array] = None,
+):
+    """Bisection projection onto F_s. Returns (f, tau).
+
+    Mirrors ``jaxcache.fractional.capped_simplex_project`` operation-for-
+    operation so that ``sizes == 1`` reduces *bit-exactly* to the unit path
+    (cold bracket [min(y)-1, max(y)], midpoint bisection on ``mass >= C``)
+    — locked down in tests/core/test_ogb_sized.py.  Sizes must be > 0
+    (validated host-side by the callers; see
+    ``core.ogb_sized.weighted_capped_simplex_tau``).
+    """
+    s = jnp.asarray(sizes, y.dtype)
+    if lo is None:
+        lo = jnp.min((y - 1.0) / s)
+    if hi is None:
+        hi = jnp.max(y / s)
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        mass = jnp.sum(s * jnp.clip(y - s * mid, 0.0, 1.0))
+        too_much = mass >= capacity
+        return jnp.where(too_much, mid, lo), jnp.where(too_much, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    tau = 0.5 * (lo + hi)
+    return jnp.clip(y - s * tau, 0.0, 1.0), tau
+
+
+def weighted_simplex_project_warm(
+    y: jax.Array,
+    sizes: jax.Array,
+    capacity: float,
+    lo: jax.Array,
+    hi: jax.Array,
+    tau0: jax.Array,
+    sweeps: int = 8,
+):
+    """Warm-bracketed safeguarded Newton on the weighted mass. Returns (f, tau).
+
+    Each sweep evaluates (g(t), slope) in one catalog pass — the slope of the
+    piecewise-linear g is -sum_{i interior} s_i^2 — shrinks the bracket by
+    the sign of ``g(t) - C``, and proposes the Newton point safeguarded by
+    the bisection midpoint.  Requires a valid bracket g(lo) >= C >= g(hi);
+    the accumulated-y (never re-projected) formulation of the tree carry
+    makes tau monotone so the previous threshold is a valid ``lo``.
+    """
+    cap = jnp.float32(capacity)
+    s = jnp.asarray(sizes, y.dtype)
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+    t = jnp.clip(jnp.asarray(tau0, jnp.float32), lo, hi)
+
+    def body(_, carry):
+        lo, hi, t = carry
+        clipped = jnp.clip(y - s * t, 0.0, 1.0)
+        interior = jnp.logical_and(clipped > 0.0, clipped < 1.0)
+        mass = jnp.sum(s * clipped)
+        slope = jnp.sum(jnp.where(interior, s * s, 0.0))
+        too_much = mass >= cap
+        lo = jnp.where(too_much, t, lo)
+        hi = jnp.where(too_much, hi, t)
+        t_newton = t + (mass - cap) / jnp.maximum(slope, 1e-12)
+        t_mid = 0.5 * (lo + hi)
+        ok = jnp.logical_and(
+            slope > 0.0, jnp.logical_and(t_newton >= lo, t_newton <= hi)
+        )
+        return lo, hi, jnp.where(ok, t_newton, t_mid)
+
+    _lo, _hi, tau = jax.lax.fori_loop(0, sweeps, body, (lo, hi, t))
+    return jnp.clip(y - s * tau, 0.0, 1.0), tau

@@ -33,7 +33,7 @@ GOLDEN_SCENARIOS = sorted(
 # fractional float32 engines: small tolerance for reduction-order drift
 EXACT_ATOL = 1e-12
 FLOAT_ATOL = 5e-3
-FLOAT_ROWS = ("OGB", "OMD")
+FLOAT_ROWS = ("OGB", "OMD", "OGB_sized_tree", "OGB_sized_scan")
 
 
 def _golden_path(name: str) -> str:
@@ -45,8 +45,12 @@ def _snapshot(name: str) -> dict:
     rows = {}
     for policy, row in sorted(res.rows.items()):
         entry = {"hit_ratio": round(row["hit_ratio"], 10)}
+        if "byte_hit_ratio" in row:
+            entry["byte_hit_ratio"] = round(row["byte_hit_ratio"], 10)
         if "regret" in row:
             entry["regret"] = round(row["regret"], 6)
+        if "byte_regret" in row:
+            entry["byte_regret"] = round(row["byte_regret"], 6)
         rows[policy] = entry
     return {
         "scenario": name,
@@ -56,6 +60,24 @@ def _snapshot(name: str) -> dict:
         "C": res.C,
         "rows": rows,
     }
+
+
+def test_sized_cdn_golden_ranking_flip():
+    """The committed sized_cdn fixture certifies the scenario's claim:
+    byte hit ratio orders the policies differently than object hit ratio
+    (size-blind frequency policies win on objects, the byte-weighted
+    gradient policy wins on bytes)."""
+    path = _golden_path("sized_cdn")
+    assert os.path.exists(path), "missing sized_cdn golden (--update-golden)"
+    with open(path) as f:
+        rows = json.load(f)["rows"]
+    pols = sorted(k for k in rows if k != "OPT(static)")
+    assert all("byte_hit_ratio" in rows[k] for k in pols)
+    by_obj = sorted(pols, key=lambda k: -rows[k]["hit_ratio"])
+    by_byte = sorted(pols, key=lambda k: -rows[k]["byte_hit_ratio"])
+    assert by_obj != by_byte, (by_obj, by_byte)
+    # and the flip is not a hairline tie: the byte winner is an object loser
+    assert by_byte[0] != by_obj[0]
 
 
 @pytest.mark.parametrize("name", GOLDEN_SCENARIOS)
@@ -87,7 +109,7 @@ def test_golden_scenario(name, request):
         atol = FLOAT_ATOL if policy in FLOAT_ROWS else EXACT_ATOL
         got = snap["rows"][policy]
         for metric, want in entry.items():
-            tol = atol if metric == "hit_ratio" else max(
+            tol = atol if metric in ("hit_ratio", "byte_hit_ratio") else max(
                 FLOAT_ATOL * golden["T"], abs(want) * 5e-3
             )
             assert got[metric] == pytest.approx(want, abs=tol), (

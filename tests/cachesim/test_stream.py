@@ -41,15 +41,20 @@ WINDOW = 16
 
 
 def _kind_kwargs(kind):
-    """eta is only a fractional-policy parameter."""
-    return {"eta": 0.03} if api.policy_def(kind).fractional else {}
+    """eta is only a fractional-policy parameter; ogb_sized additionally
+    needs per-item sizes (slabs here, so its size classes are exact)."""
+    kw = {"eta": 0.03} if api.policy_def(kind).fractional else {}
+    if kind == "ogb_sized":
+        kw["sizes"] = np.asarray([1.0, 2.0, 4.0, 8.0])[np.arange(N) % 4]
+    return kw
 
 
 def test_stream_kinds_cover_the_registry():
     # the sweep below must cover every replayable kind (ogb_grad streams
     # dense gradients, not request ids, and is rightly excluded)
     assert set(STREAM_KINDS) == {
-        "ogb", "ogb_tree", "omd", "lru", "fifo", "lfu", "ftpl"
+        "ogb", "ogb_tree", "omd", "lru", "fifo", "lfu", "ftpl",
+        "gds", "ogb_sized",
     }
 
 

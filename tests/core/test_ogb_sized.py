@@ -63,6 +63,81 @@ def test_lazy_sized_matches_eager(seed):
         np.testing.assert_allclose(got, f, atol=5e-6, err_msg=f"item {j}")
 
 
+@pytest.mark.parametrize(
+    "kw",
+    [
+        dict(s=[1.0, 0.0, 2.0]),  # zero size -> inf bracket
+        dict(s=[1.0, -3.0, 2.0]),  # negative size
+        dict(s=[1.0, float("nan"), 2.0]),  # NaN size -> NaN bracket
+        dict(s=[1.0, float("inf"), 2.0]),  # inf size
+        dict(C=0.0),  # zero capacity
+        dict(C=-4.0),  # negative capacity
+        dict(C=float("nan")),  # NaN capacity
+        dict(y=[0.5, float("inf"), 0.5]),  # non-finite y
+    ],
+)
+def test_weighted_tau_rejects_degenerate_inputs(kw):
+    """A zero/negative/NaN size (or capacity) makes the bisection bracket
+    inf/NaN and the loop would silently return garbage — reject loudly."""
+    y = np.asarray(kw.get("y", [0.5, 0.8, 0.9]), np.float64)
+    s = np.asarray(kw.get("s", [1.0, 2.0, 4.0]), np.float64)
+    with pytest.raises(ValueError):
+        weighted_capped_simplex_tau(y, s, float(kw.get("C", 2.0)))
+
+
+def test_weighted_tau_rejects_shape_mismatch_and_empty():
+    with pytest.raises(ValueError):
+        weighted_capped_simplex_tau(np.ones(3), np.ones(4), 1.0)
+    with pytest.raises(ValueError):
+        weighted_capped_simplex_tau(np.ones(0), np.ones(0), 1.0)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_weighted_tau_bracket_property(seed):
+    """For arbitrary valid inputs the bisection bracket always contains the
+    root: the returned tau is feasible (projected mass == min(C, clipped
+    mass)) and non-negative."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 40))
+    y = rng.normal(0.0, 2.0, size=n)
+    s = np.exp(rng.uniform(np.log(0.25), np.log(64.0), size=n))
+    C = float(np.exp(rng.uniform(np.log(0.1), np.log(2 * s.sum()))))
+    tau = weighted_capped_simplex_tau(y, s, C)
+    assert tau >= 0.0 and np.isfinite(tau)
+    f = np.clip(y - s * tau, 0.0, 1.0)
+    target = min(C, float(np.sum(s * np.clip(y, 0.0, 1.0))))
+    assert abs(float(np.sum(s * f)) - target) < 1e-6 * max(1.0, target)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_sized_mass_invariant(seed):
+    """The incremental ``mass`` counter never leaks past capacity and always
+    matches the recomputed sum — including the all-coordinates-popped exit
+    where ``denom <= 0`` (the regression this guards: that path used to
+    leave the float drift in ``mass``, so later updates compared against a
+    phantom overfull cache)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 25))
+    k = int(rng.integers(1, 4))
+    sizes_by_class = sorted(
+        float(x) for x in np.exp(rng.uniform(0.0, 4.0, size=k))
+    )
+    classes = {i: int(rng.integers(0, k)) for i in range(n)}
+    # tiny capacity relative to step sizes maximizes pop pressure
+    C = float(np.exp(rng.uniform(np.log(0.5), np.log(8.0))))
+    eta = float(np.exp(rng.uniform(np.log(0.01), np.log(2.0))))
+    ogb = SizedOGB(sizes_by_class, classes, C, eta)
+    s = np.array([sizes_by_class[classes[i]] for i in range(n)])
+    for j in rng.integers(0, n, size=80):
+        ogb.update(int(j))
+        assert ogb.mass <= C + 1e-9, (ogb.mass, C)
+        f = ogb.fractional_vector(n)
+        assert np.all(f >= -1e-12) and np.all(f <= 1 + 1e-12)
+        assert abs(float(np.sum(s * f)) - ogb.mass) < 1e-6 * max(1.0, C)
+
+
 def test_byte_hit_optimization():
     """Equal request rates, very different sizes: under byte-hit reward the
     policy fills capacity with the items that maximize bytes served."""
