@@ -25,6 +25,7 @@ from . import (
     fig9_occupancy,
     fig10_batched,
     fig11_locality,
+    serving_slo,
     sized_cdn,
     stream_scale,
     throughput,
@@ -42,6 +43,7 @@ SUITES = {
     "kernels": kernel_sweeps.main,
     "throughput": throughput.main,
     "engines": engines_throughput.main,
+    "serving": serving_slo.main,
     "sized": sized_cdn.main,
     "stream": stream_scale.main,
 }

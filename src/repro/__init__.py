@@ -38,6 +38,7 @@ _LAZY = {
     "load_trace": "repro.cachesim.tracelab",
     "open_trace": "repro.cachesim.tracelab",
     "run_stream": "repro.cachesim.tracelab",
+    "StreamFault": "repro.cachesim.tracelab",
     "synthesize": "repro.cachesim.tracelab",
     "synthesize_chunks": "repro.cachesim.tracelab",
     "synthesize_sizes": "repro.cachesim.tracelab",

@@ -59,6 +59,7 @@ from repro.jaxcache.fractional import (
     DEFAULT_WARM_SWEEPS,
     capped_simplex_project,
     permanent_random_numbers,
+    poisson_sample,
 )
 
 __all__ = [
@@ -223,6 +224,7 @@ def run(
     track_opt: bool = True,
     keep_carry: bool = True,
     name: Optional[str] = None,
+    block: bool = True,
     **init_kw,
 ) -> RunResult:
     """Replay a whole trace through one policy: a single donated-carry scan.
@@ -252,6 +254,16 @@ def run(
     overrides the per-item miss costs (default: the sizes).  On resume
     the carry already holds the policy-side sizes; ``sizes`` may still be
     passed for the host-side byte accounting.
+
+    **Non-blocking dispatch:** ``block=False`` returns as soon as the scan
+    is *dispatched* — the result's ``reward``/``hits``/``aux``/
+    ``occupancy``/``byte_hits`` (and the carry) are still device arrays
+    backed by in-flight computation, and ``wall_seconds`` measures only
+    the dispatch.  Call ``jax.block_until_ready`` (then ``np.asarray``)
+    at the consume point.  The async streaming pipeline
+    (:func:`repro.cachesim.tracelab.stream.run_stream`) uses this to
+    overlap host ingest with device replay; the returned carry can be fed
+    straight back into the next ``run`` — JAX chains the dispatches.
     """
     chunks, trace_used, t_used = _chunked(trace, window)
     extras = {}
@@ -298,7 +310,8 @@ def run(
     compiled = _compiled(_scan_jit(pd.step), carry, chunks)
     t0 = time.perf_counter()
     carry, out = compiled(carry, chunks)
-    jax.block_until_ready((carry, out))
+    if block:
+        jax.block_until_ready((carry, out))
     wall = time.perf_counter() - t0
     opt = (
         float(best_static_hits(trace_used, int(capacity)))
@@ -310,25 +323,37 @@ def run(
         bytes_total = float(
             np.sum(np.asarray(sizes, np.float64)[trace_used])
         )
+    if block:
+        reward = np.asarray(out.reward, np.float64)
+        hits = np.asarray(out.hits, np.int64)
+        aux = np.asarray(out.aux, np.float64)
+        occupancy = np.asarray(out.occupancy, np.float64)
+        byte_hits = (
+            np.asarray(out.byte_hits, np.float64)
+            if out.byte_hits is not None
+            else None
+        )
+    else:
+        # in-flight device arrays: np.asarray here would silently block
+        reward, hits, aux, occupancy = (
+            out.reward, out.hits, out.aux, out.occupancy
+        )
+        byte_hits = out.byte_hits
     return RunResult(
         name=name or pd.name,
         kind=pd.kind,
         T=t_used,
         window=window,
         capacity=int(capacity) if capacity is not None else -1,
-        reward=np.asarray(out.reward, np.float64),
-        hits=np.asarray(out.hits, np.int64),
-        aux=np.asarray(out.aux, np.float64),
-        occupancy=np.asarray(out.occupancy, np.float64),
+        reward=reward,
+        hits=hits,
+        aux=aux,
+        occupancy=occupancy,
         opt_hits=opt,
         carry=carry if keep_carry else None,
         wall_seconds=wall,
         extras=extras,
-        byte_hits=(
-            np.asarray(out.byte_hits, np.float64)
-            if out.byte_hits is not None
-            else None
-        ),
+        byte_hits=byte_hits,
         bytes_total=bytes_total,
     )
 
@@ -846,10 +871,14 @@ def _ogb_grad_def(iters: int = DEFAULT_BISECT_ITERS) -> PolicyDef:
     ``step(carry, grad)`` takes a raw per-item weight vector (e.g. routed
     token counts per MoE expert), normalizes it to unit mass, and performs
     one fractional OGB update.  ``StepOut.reward`` is the weighted resident
-    hit mass (pre-update, under the carried Poisson sample), ``hits`` the
-    number of items swapped *in* this step — the positive-coordination
-    telemetry (:class:`repro.serve.expert_cache.OGBExpertCache` streams this
-    one step at a time via the carry contract)."""
+    hit mass (pre-update, under the carried Poisson sample) and ``hits``
+    the *count* of requested items resident at decision time — the same
+    "hits mean hits" convention every other kind follows.  Swap-in/out
+    telemetry (the paper's O(changed-mass) coordination claim) is *not* a
+    hit count and is derived by the consumer from the residency-mask diff
+    (:class:`repro.serve.expert_cache.OGBExpertCache` streams this one
+    step at a time via the carry contract and diffs
+    :func:`~repro.jaxcache.fractional.poisson_sample` masks)."""
 
     def init(catalog_size, capacity, *, seed=0, eta=None, horizon=None,
              n_slots=None, sizes=None, costs=None):
@@ -873,18 +902,18 @@ def _ogb_grad_def(iters: int = DEFAULT_BISECT_ITERS) -> PolicyDef:
     def step(carry, grad):
         total = jnp.sum(grad)
         norm = grad / jnp.maximum(total, 1.0)  # unit-mass per-step gradient
-        resident = carry.f >= carry.p
+        resident = poisson_sample(carry.f, carry.p, 0)
         reward = jnp.sum(norm * resident.astype(jnp.float32))
+        hits = jnp.sum(
+            jnp.logical_and(grad > 0, resident).astype(jnp.int32)
+        )
         y = carry.f + carry.eta * norm
         f_new, tau = capped_simplex_project(y, carry.cap, iters)
-        resident_new = f_new >= carry.p
-        swapped = jnp.sum(
-            jnp.logical_and(resident_new, ~resident).astype(jnp.int32)
-        )
+        resident_new = poisson_sample(f_new, carry.p, 0)
         carry = carry._replace(f=f_new, tau=tau, t=carry.t + 1)
         return carry, StepOut(
             reward,
-            swapped,
+            hits,
             tau,
             jnp.sum(resident_new.astype(jnp.float32)),
         )

@@ -145,16 +145,47 @@ class StreamResult(RunResult):
     inherited windowed/ratio view works unchanged); on top of them the
     stream tracks the **time-varying OPT proxy**: ``dyn_opt_hits[k]`` is
     the hindsight-optimal static allocation recomputed for the ``k``-th
-    ``dyn_opt_window``-request window alone.  Summed, that is the
-    comparator of the *dynamic* regret notion (an adversary allowed to
-    re-pick its cache every window) — a strictly harder bar than the
-    static OPT in ``opt_hits``.
+    ``dyn_opt_window``-request window alone (the final window may be a
+    shorter remainder — see :attr:`dyn_opt_lens` — so together the windows
+    cover every replayed request).  Summed, that is the comparator of the
+    *dynamic* regret notion (an adversary allowed to re-pick its cache
+    every window) — a strictly harder bar than the static OPT in
+    ``opt_hits``.
+
+    **Timing split:** ``wall_seconds`` stays the total wall clock of the
+    stream (back-compat).  The component clocks attribute it:
+    ``ingest_seconds`` is time spent waiting on the chunk source,
+    ``device_seconds`` is dispatch plus time blocked on device results,
+    and ``host_seconds`` is the segment re-batching + dynamic-OPT
+    accounting.  On the synchronous path (``prefetch=0``) the components
+    sum to roughly ``wall_seconds``; on the async pipeline they *overlap*,
+    so their sum can exceed the wall clock — that surplus is the measured
+    overlap win.
     """
 
     dyn_opt_hits: Optional[np.ndarray] = None  # (K,) per-window OPT hits
     dyn_opt_window: int = 0  # requests per dynamic-OPT window (0 = off)
     n_segments: int = 0  # device dispatches the stream took
     t_dropped: int = 0  # trailing requests short of one window, not replayed
+    ingest_seconds: float = 0.0  # time waiting on the chunk source
+    device_seconds: float = 0.0  # dispatch + time blocked on device results
+    host_seconds: float = 0.0  # re-batching + dynamic-OPT host accounting
+    prefetch: int = 0  # pipeline depth the stream ran with (0 = synchronous)
+
+    @property
+    def dyn_opt_lens(self) -> np.ndarray:
+        """Requests covered by each dynamic-OPT window.
+
+        All windows are ``dyn_opt_window`` long except the last, which
+        covers the replayed remainder (the flush that keeps
+        ``sum(dyn_opt_lens) == T``)."""
+        if self.dyn_opt_hits is None:
+            raise ValueError("run_stream(..., opt_window=...) was not set")
+        k = len(self.dyn_opt_hits)
+        lens = np.full(k, self.dyn_opt_window, np.int64)
+        if k:
+            lens[-1] = self.T - (k - 1) * self.dyn_opt_window
+        return lens
 
     @property
     def dynamic_opt_total(self) -> float:
@@ -166,17 +197,16 @@ class StreamResult(RunResult):
     @property
     def dynamic_regret(self) -> float:
         """Fractional-reward regret vs the time-varying OPT proxy, over the
-        prefix the dynamic windows cover."""
+        prefix the dynamic windows cover (== every replayed request)."""
         total = self.dynamic_opt_total  # raises cleanly when not tracked
-        covered = len(self.dyn_opt_hits) * self.dyn_opt_window
+        covered = int(self.dyn_opt_lens.sum())
         chunks = covered // max(self.window, 1)
         return total - float(self.reward[:chunks].sum())
 
     def dyn_opt_ratio(self) -> np.ndarray:
         """Per-window hit ratio of the time-varying OPT proxy."""
-        if self.dyn_opt_hits is None:
-            raise ValueError("run_stream(..., opt_window=...) was not set")
-        return self.dyn_opt_hits / max(self.dyn_opt_window, 1)
+        lens = self.dyn_opt_lens  # raises cleanly when not tracked
+        return self.dyn_opt_hits / np.maximum(lens, 1)
 
 
 @dataclass

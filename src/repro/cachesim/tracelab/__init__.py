@@ -35,7 +35,7 @@ from repro.cachesim.tracelab.loaders import (
     sniff_format,
     write_trace,
 )
-from repro.cachesim.tracelab.stream import run_stream
+from repro.cachesim.tracelab.stream import StreamFault, run_stream
 from repro.cachesim.tracelab.synth import (
     TraceProfile,
     fit_profile,
@@ -52,6 +52,7 @@ __all__ = [
     "load_trace",
     "open_trace",
     "run_stream",
+    "StreamFault",
     "sniff_format",
     "synthesize",
     "synthesize_chunks",

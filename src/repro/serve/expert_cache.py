@@ -60,34 +60,59 @@ class OGBExpertCache:
         pd = policy_def("ogb_grad")
         self.carry = pd.init(n, self.C, seed=seed, eta=self.eta)
         self._step = jax.jit(pd.step, donate_argnums=(0,))
-        self._resident = poisson_sample(self.carry.f, self.carry.p, self.C)
+        self._resident = np.asarray(
+            poisson_sample(self.carry.f, self.carry.p, self.C)
+        )
         self.steps = 0
         self.swapped_in = 0
+        self.swapped_out = 0
         self.hits_weighted = 0.0
         self.total_weighted = 0.0
 
     @property
-    def resident(self) -> jax.Array:
-        """Current Poisson residency mask, derived lazily from the carry
-        (the jitted step already accounts swaps/occupancy — no extra per-step
-        device dispatch on the serving hot path)."""
+    def resident(self) -> np.ndarray:
+        """Current Poisson residency mask — always the one residency rule
+        (:func:`~repro.jaxcache.fractional.poisson_sample` over the carried
+        state and permanent random numbers), recomputed lazily from the
+        carry when invalidated."""
         if self._resident is None:
-            self._resident = self.carry.f >= self.carry.p
+            self._resident = np.asarray(
+                poisson_sample(self.carry.f, self.carry.p, self.C)
+            )
         return self._resident
 
     def step(self, expert_counts: np.ndarray) -> Dict[str, float]:
-        """expert_counts: (L, E) routed-token counts from the router."""
+        """expert_counts: (L, E) routed-token counts from the router.
+
+        ``swapped_in``/``swapped_out`` are the *true* residency churn —
+        the diff between consecutive Poisson residency masks — not the hit
+        count (``out.hits`` counts requested-and-resident experts).  The
+        mask diff is what the paper's O(changed-mass) positive-coordination
+        claim is about; ``bytes_per_expert`` scales it into the fetch
+        traffic the swaps cost (``swap_bytes``/``resident_bytes``)."""
         counts = jnp.asarray(expert_counts, jnp.float32).reshape(-1)
+        prev = self.resident  # materialize before the carry is donated
         self.carry, out = self._step(self.carry, counts)
-        self._resident = None  # recomputed on demand from the new carry
+        new = np.asarray(
+            poisson_sample(self.carry.f, self.carry.p, self.C)
+        )
+        self._resident = new
+        s_in = int(np.sum(new & ~prev))
+        s_out = int(np.sum(prev & ~new))
         self.steps += 1
-        self.swapped_in += int(out.hits)
+        self.swapped_in += s_in
+        self.swapped_out += s_out
         self.hits_weighted += float(out.reward)
         self.total_weighted += 1.0
+        bpe = int(self.cfg.bytes_per_expert)
         return {
             "resident_hit_ratio": float(out.reward),
-            "swapped_in": int(out.hits),
+            "hits": int(out.hits),
+            "swapped_in": s_in,
+            "swapped_out": s_out,
             "occupancy": int(out.occupancy),
+            "swap_bytes": (s_in + s_out) * bpe,
+            "resident_bytes": int(np.sum(new)) * bpe,
         }
 
     def resident_mask(self) -> np.ndarray:
