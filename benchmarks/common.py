@@ -11,7 +11,7 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Callable, Dict, List
+from typing import Callable
 
 import numpy as np
 

@@ -5,7 +5,6 @@ Trace: cdn-like Zipf, subsampled scale (1e5 requests, 1e4 items, C=500)."""
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.cachesim.simulator import simulate
 from repro.cachesim.traces import zipf

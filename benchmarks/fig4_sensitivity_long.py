@@ -6,7 +6,6 @@ drags early performance; OGB stays robust across eta."""
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.cachesim.simulator import simulate
 from repro.cachesim.traces import zipf

@@ -21,9 +21,8 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core.projection import capped_simplex_tau, project_capped_simplex
+from repro.core.projection import project_capped_simplex
 from repro.kernels.capped_simplex.ops import fused_ogb_update
-from repro.kernels.capped_simplex.ref import fused_ogb_update_ref
 
 from .common import csv_row, save_json, scale
 

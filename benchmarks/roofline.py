@@ -40,7 +40,7 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.configs.base import SHAPES, get_arch
 

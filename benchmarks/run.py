@@ -75,7 +75,7 @@ def main() -> None:
         print(f"\n=== {name} " + "=" * (70 - len(name)))
         try:
             SUITES[name]()
-        except Exception as e:
+        except Exception as e:  # reprolint: allow(broad-except) recorded; exits 1 below
             failures.append((name, e))
             traceback.print_exc()
     if failures:

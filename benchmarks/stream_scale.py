@@ -25,7 +25,6 @@ import json
 import os
 import resource
 
-import numpy as np
 
 import jax
 

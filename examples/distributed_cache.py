@@ -55,7 +55,7 @@ def main():
     ff = jax.device_put(jnp.full((E, N), C / N, jnp.float32), f_sh)
     rng = np.random.default_rng(1)
     total = 0.0
-    for i in range(10):
+    for _ in range(10):
         ids = jnp.asarray(rng.integers(0, N, size=(E, B)), jnp.int32)
         ff, rewards = fleet_step(ff, jax.device_put(ids, ids_sh))
         total += float(jnp.sum(rewards))

@@ -56,7 +56,7 @@ def run(pool_policy_name: str, seed: int = 0):
 
     rng = np.random.default_rng(seed)
     for prompts in request_stream(rng, cfg.vocab_size, n_steps=n_steps):
-        out = engine.generate(prompts, max_new_tokens=4)
+        engine.generate(prompts, max_new_tokens=4)
     return engine, pool
 
 

@@ -1,0 +1,44 @@
+"""reprolint: static + dynamic enforcement of the engine's contracts.
+
+Three checkers, one gate:
+
+* :mod:`repro.analysis.rules` / :mod:`~repro.analysis.lint` — an AST lint
+  pass with repo-specific JAX rules (host sync in traced functions,
+  numpy-on-tracer, Python branches on traced values, mutable defaults,
+  hot-path classes without ``__slots__``, over-broad excepts, unlocked
+  thread-shared writes, float64 hazards in kernel entry points);
+* :mod:`repro.analysis.contracts` — a dynamic PolicyDef contract checker
+  that walks the live registry and verifies carry stability, StepOut
+  completeness, donation aliasing, and sizes/costs rejection via abstract
+  eval (no device steps);
+* :mod:`repro.analysis.recompile` — a compile tracker that locks the
+  documented compile counts (one per stream shape, zero on resume).
+
+Run the CI gate locally::
+
+    python -m repro.analysis            # lint src/ + contract-check registry
+    python -m repro.analysis --list-rules
+"""
+
+from repro.analysis.contracts import (
+    ContractReport,
+    check_all,
+    check_policy_def,
+)
+from repro.analysis.lint import lint_file, lint_paths
+from repro.analysis.recompile import CompileLog, track_compiles
+from repro.analysis.rules import RULES, Finding, LintConfig, lint_source
+
+__all__ = [
+    "CompileLog",
+    "ContractReport",
+    "Finding",
+    "LintConfig",
+    "RULES",
+    "check_all",
+    "check_policy_def",
+    "lint_file",
+    "lint_paths",
+    "lint_source",
+    "track_compiles",
+]

@@ -1,0 +1,99 @@
+"""CLI gate: ``python -m repro.analysis [paths ...]``.
+
+Runs the AST lint pass over the given paths (default: the installed
+``repro`` source tree) and the PolicyDef contract checker over the live
+registry.  Exit code 0 means every rule is silent and every registered
+kind honors its contracts; anything else is a finding list on stdout.
+CI runs this on every push (the ``lint`` job); policy authors run it
+locally before registering a new kind.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def _default_paths() -> list:
+    """The repo's src/repro tree when run from a checkout, else the
+    installed package directory."""
+    here = os.path.dirname(os.path.abspath(__file__))  # .../repro/analysis
+    return [os.path.dirname(here)]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="reprolint",
+        description="JAX contract checker + AST lint for the OGB cache "
+        "reproduction",
+    )
+    ap.add_argument(
+        "paths",
+        nargs="*",
+        help="files/directories to lint (default: the repro package)",
+    )
+    ap.add_argument(
+        "--rules",
+        help="comma-separated rule ids to run (default: all)",
+    )
+    ap.add_argument(
+        "--no-lint", action="store_true", help="skip the AST lint pass"
+    )
+    ap.add_argument(
+        "--no-contracts",
+        action="store_true",
+        help="skip the PolicyDef contract checker",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true", help="print the rule table"
+    )
+    args = ap.parse_args(argv)
+
+    from repro.analysis.rules import RULES
+
+    if args.list_rules:
+        for rule in RULES.values():
+            print(f"{rule.rule_id}  {rule.slug}\n    {rule.doc}")
+        return 0
+
+    failed = False
+    t0 = time.perf_counter()
+
+    if not args.no_lint:
+        from repro.analysis.lint import iter_python_files, lint_paths
+
+        paths = args.paths or _default_paths()
+        rules = args.rules.split(",") if args.rules else None
+        findings = lint_paths(paths, rules=rules)
+        n_files = len(iter_python_files(paths))
+        for f in findings:
+            print(f)
+        if findings:
+            failed = True
+        print(
+            f"reprolint: {len(findings)} finding(s) over {n_files} file(s)"
+        )
+
+    if not args.no_contracts:
+        from repro.analysis.contracts import check_all
+
+        reports = check_all()
+        bad = [r for r in reports if not r.ok]
+        for r in bad:
+            print(r)
+        n_checks = sum(len(r.checks) for r in reports)
+        print(
+            f"contracts: {len(reports) - len(bad)}/{len(reports)} "
+            f"PolicyDef kinds ok ({n_checks} checks)"
+        )
+        if bad:
+            failed = True
+
+    print(f"total: {time.perf_counter() - t0:.1f}s")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

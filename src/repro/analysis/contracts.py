@@ -1,0 +1,491 @@
+"""Dynamic PolicyDef contract checker — abstract eval, no device steps.
+
+The whole execution layer (``api.run``'s donated-carry AOT scan, the
+vmapped ``api.sweep`` grid, ``run_stream``'s resumable segments, the
+serving loop) assumes every registered :class:`~repro.cachesim.api.
+PolicyDef` honors contracts the type system cannot express:
+
+* ``init``/``step`` **signatures** follow the protocol (``init(
+  catalog_size, capacity, *, seed, eta, horizon, n_slots, sizes, costs)``,
+  ``step(carry, request_ids)``);
+* the **carry pytree is a fixed point of step**: same treedef, same leaf
+  shapes and dtypes out as in — otherwise ``lax.scan`` rejects it, the
+  executable cache misses every segment, and resume breaks;
+* ``step`` emits a **complete StepOut** (scalar f32 reward/aux/occupancy,
+  scalar i32 hits, byte_hits None or scalar f32);
+* **donation is actually honored**: every carry leaf aliases an output
+  buffer in the lowered module (a dtype/shape drift silently disables
+  donation and doubles peak memory at fleet scale);
+* the **sizes=/costs= rejection paths fire**: a policy with no size or
+  cost model must reject them loudly — and one that accepts sizes must
+  emit ``byte_hits`` (silently dropping sizes corrupts byte accounting).
+
+Everything runs through ``jax.eval_shape`` and ``jit(...).lower()`` on
+``ShapeDtypeStruct`` avals: carries are initialized concretely (tiny host
+arrays) but **no policy step is ever executed on device**, which is what
+keeps the CI gate fast.
+"""
+
+from __future__ import annotations
+
+import inspect
+import warnings
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ContractReport",
+    "check_policy_def",
+    "check_all",
+    "EXTRA_FLAVORS",
+]
+
+#: small-but-not-degenerate default geometry (catalog, capacity, window)
+DEFAULT_N = 96
+DEFAULT_C = 8
+DEFAULT_W = 16
+
+#: non-default static flavors also under contract (options as a callable of
+#: the probe capacity, since madow flavors bind it statically)
+EXTRA_FLAVORS: Sequence[Tuple[str, Any]] = (
+    ("ogb", lambda cap: {"sample": "madow", "madow_capacity": cap}),
+    ("ogb", lambda cap: {"sample": "madow_tree", "madow_capacity": cap}),
+    ("ogb", lambda cap: {"sample": "none"}),
+    ("ogb_sized", lambda cap: {"flavor": "scan"}),
+    ("lru", lambda cap: {"impl": "dense"}),
+    ("lfu", lambda cap: {"impl": "dense"}),
+    ("ftpl", lambda cap: {"impl": "dense"}),
+)
+
+_REQUIRED_INIT_KWARGS = ("seed", "eta", "horizon", "n_slots")
+_SIZED_KWARGS = ("sizes", "costs")
+
+
+@dataclass
+class ContractReport:
+    """Outcome of one PolicyDef's contract check."""
+
+    kind: str
+    options: Dict[str, Any] = field(default_factory=dict)
+    checks: List[str] = field(default_factory=list)  # passed check names
+    errors: List[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def __str__(self) -> str:
+        tag = "ok" if self.ok else "FAIL"
+        opts = f" {self.options}" if self.options else ""
+        head = f"[{tag}] {self.kind}{opts}: {len(self.checks)} checks"
+        if self.errors:
+            head += "\n" + "\n".join(f"    - {e}" for e in self.errors)
+        return head
+
+
+def _avals(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(np.shape(x), x.dtype), tree
+    )
+
+
+def _leaf_sig(tree):
+    return [
+        (tuple(np.shape(x)), str(x.dtype)) for x in jax.tree.leaves(tree)
+    ]
+
+
+def _check_signatures(pd, rep: ContractReport) -> None:
+    sig = inspect.signature(pd.init)
+    params = list(sig.parameters.values())
+    pos = [
+        p
+        for p in params
+        if p.kind
+        in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)
+    ]
+    names = [p.name for p in pos]
+    if names[:2] != ["catalog_size", "capacity"]:
+        rep.errors.append(
+            f"init must take (catalog_size, capacity) positionally, got "
+            f"{names[:2]}"
+        )
+    kw = {
+        p.name
+        for p in params
+        if p.kind in (p.KEYWORD_ONLY, p.POSITIONAL_OR_KEYWORD)
+    }
+    has_var_kw = any(p.kind == p.VAR_KEYWORD for p in params)
+    missing = [k for k in _REQUIRED_INIT_KWARGS if k not in kw]
+    if missing and not has_var_kw:
+        rep.errors.append(f"init missing keyword params {missing}")
+    missing_sized = [k for k in _SIZED_KWARGS if k not in kw]
+    if missing_sized and not has_var_kw:
+        rep.errors.append(
+            f"init must accept (and accept-or-reject loudly) {missing_sized}"
+        )
+    step_sig = inspect.signature(pd.step)
+    n_step = len(
+        [
+            p
+            for p in step_sig.parameters.values()
+            if p.kind
+            in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)
+            and p.default is p.empty
+        ]
+    )
+    if n_step != 2:
+        rep.errors.append(
+            f"step must take exactly (carry, request_ids), got {n_step} "
+            "required positional params"
+        )
+    rep.checks.append("signatures")
+
+
+def _build_carry(pd, n, c, w, rep):
+    """Initialize a carry, probing whether the kind requires sizes."""
+    eta = 0.05 if pd.fractional else None
+    base = dict(seed=0, eta=eta, horizon=8 * w, n_slots=None)
+    sizes = np.full(n, 2.0, np.float64)
+    try:
+        return pd.init(n, c, **base), False, eta
+    except (ValueError, TypeError):
+        pass
+    try:
+        return pd.init(n, c, sizes=sizes, **base), True, eta
+    except (ValueError, TypeError) as e:
+        rep.errors.append(
+            f"init failed both unsized and sized probes: {e}"
+        )
+        return None, False, eta
+
+
+#: kinds with a real miss-cost model; every other kind must reject costs=
+#: loudly (a silently-dropped cost array corrupts cost-weighted results)
+COST_MODEL_KINDS = frozenset({"gds", "ogb_sized"})
+
+
+def _probe_rejections(pd, n, c, w, eta, requires_sizes, rep):
+    """sizes=/costs= must be consumed meaningfully or rejected loudly."""
+    sizes = np.full(n, 2.0, np.float64)
+    costs = np.full(n, 3.0, np.float64)
+    base = dict(seed=0, eta=eta, horizon=8 * w, n_slots=None)
+    if requires_sizes:
+        # the sized-only kinds: missing sizes must raise
+        try:
+            pd.init(n, c, **base)
+            rep.errors.append(
+                "init accepted a call without sizes although the kind "
+                "requires them"
+            )
+        except ValueError:
+            rep.checks.append("missing-sizes-rejected")
+    else:
+        # sizes: either rejected with ValueError, or the sized step must
+        # emit byte_hits — accepting-and-ignoring is the silent hazard
+        try:
+            sized_carry = pd.init(n, c, sizes=sizes, **base)
+        except ValueError:
+            rep.checks.append("sizes-rejected")
+            sized_carry = None
+        if sized_carry is not None:
+            ids = _ids_aval(pd, n, w)
+            try:
+                _, out = jax.eval_shape(pd.step, _avals(sized_carry), ids)
+                if out.byte_hits is None:
+                    rep.errors.append(
+                        "init accepted sizes= but step emits no byte_hits "
+                        "— sizes are silently dropped"
+                    )
+                else:
+                    rep.checks.append("sizes-accepted-with-byte-hits")
+            except Exception as e:  # reprolint: allow(broad-except) recorded as contract error
+                rep.errors.append(f"sized step failed abstract eval: {e}")
+    # costs without a cost model must be rejected
+    kw = dict(base)
+    if requires_sizes:
+        kw["sizes"] = sizes
+    try:
+        pd.init(n, c, costs=costs, **kw)
+        accepted = True
+    except ValueError:
+        accepted = False
+    if pd.kind in COST_MODEL_KINDS:
+        if accepted:
+            rep.checks.append("costs-accepted")
+        else:
+            rep.errors.append(
+                f"{pd.kind} declares a cost model but rejected costs="
+            )
+    elif accepted:
+        rep.errors.append(
+            f"{pd.kind} has no cost model but accepted costs= — must "
+            "raise ValueError"
+        )
+    else:
+        rep.checks.append("costs-rejected")
+
+
+def _ids_aval(pd, n, w):
+    if pd.trace_driven:
+        return jax.ShapeDtypeStruct((w,), jnp.int32)
+    # gradient-vector flavors consume dense per-item weights
+    return jax.ShapeDtypeStruct((n,), jnp.float32)
+
+
+def _check_step_out(out, rep) -> None:
+    from repro.cachesim.api import StepOut
+
+    if not isinstance(out, StepOut):
+        rep.errors.append(
+            f"step output is {type(out).__name__}, not StepOut"
+        )
+        return
+    expect = {
+        "reward": ((), "float32"),
+        "hits": ((), "int32"),
+        "aux": ((), "float32"),
+        "occupancy": ((), "float32"),
+    }
+    for name, (shape, dtype) in expect.items():
+        leaf = getattr(out, name)
+        if leaf is None:
+            rep.errors.append(f"StepOut.{name} missing (None)")
+            continue
+        got = (tuple(leaf.shape), str(leaf.dtype))
+        if got != (shape, dtype):
+            rep.errors.append(
+                f"StepOut.{name} must be {shape}/{dtype}, got {got}"
+            )
+    if out.byte_hits is not None:
+        got = (tuple(out.byte_hits.shape), str(out.byte_hits.dtype))
+        if got != ((), "float32"):
+            rep.errors.append(
+                f"StepOut.byte_hits must be ()/float32 (or None), got {got}"
+            )
+    rep.checks.append("step-out-complete")
+
+
+def _check_carry_stability(pd, carry, ids, rep):
+    """treedef/shape/dtype fixed point across one (and two) abstract steps."""
+    avals = _avals(carry)
+    try:
+        carry2, out = jax.eval_shape(pd.step, avals, ids)
+    except Exception as e:  # reprolint: allow(broad-except) recorded as contract error
+        rep.errors.append(f"step failed abstract eval: {e}")
+        return None
+    if jax.tree.structure(carry2) != jax.tree.structure(carry):
+        rep.errors.append(
+            "carry treedef changed across step: "
+            f"{jax.tree.structure(carry)} -> {jax.tree.structure(carry2)}"
+        )
+        return out
+    before, after = _leaf_sig(carry), _leaf_sig(carry2)
+    if before != after:
+        drift = [
+            f"leaf {i}: {b} -> {a}"
+            for i, (b, a) in enumerate(zip(before, after))
+            if b != a
+        ]
+        rep.errors.append(
+            "carry leaf shapes/dtypes changed across step ("
+            + "; ".join(drift)
+            + ") — breaks lax.scan, donation, and the executable cache"
+        )
+        return out
+    rep.checks.append("carry-stable")
+    # second application from the abstract output: catches counters that
+    # promote dtype on the second step (t + 1 weak-typing drift)
+    try:
+        carry3, _ = jax.eval_shape(pd.step, carry2, ids)
+        if _leaf_sig(carry3) != after:
+            rep.errors.append(
+                "carry drifts on the second step (weak-type promotion?)"
+            )
+        else:
+            rep.checks.append("carry-stable-2nd-step")
+    except Exception as e:  # reprolint: allow(broad-except) recorded as contract error
+        rep.errors.append(f"second abstract step failed: {e}")
+    return out
+
+
+def _check_vmappable(pd, carry, ids, rep, lanes: int = 3) -> None:
+    """The sweep contract: a stacked carry must vmap through step."""
+    stacked = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(
+            (lanes,) + tuple(np.shape(x)), x.dtype
+        ),
+        carry,
+    )
+    try:
+        carry2, out = jax.eval_shape(
+            jax.vmap(pd.step, in_axes=(0, None)), stacked, ids
+        )
+    except Exception as e:  # reprolint: allow(broad-except) recorded as contract error
+        rep.errors.append(f"step does not vmap over stacked carries: {e}")
+        return
+    if jax.tree.structure(carry2) != jax.tree.structure(carry):
+        rep.errors.append("vmapped step changed the carry treedef")
+        return
+    rep.checks.append("vmappable")
+
+
+def _unread_carry_leaves(pd, avals, ids):
+    """Leaf indices the step never READS (it writes them fresh) — jit
+    prunes those inputs at lowering, so they cannot alias an output."""
+    from jax._src.interpreters import partial_eval as pe
+
+    closed = jax.make_jaxpr(pd.step)(avals, ids)
+    _, used = pe.dce_jaxpr(
+        closed.jaxpr, [True] * len(closed.jaxpr.outvars)
+    )
+    n_carry = len(jax.tree.leaves(avals))
+    return [i for i, u in enumerate(used[:n_carry]) if not u]
+
+
+def _check_donation(pd, carry, ids, rep) -> None:
+    """Every carry leaf the step reads must alias an output in the lowered
+    module.
+
+    Verified at the *lowering* level (``tf.aliasing_output`` attributes in
+    the StableHLO), which is backend-independent — CPU drops donation at
+    compile time, but the aliasing contract is decided here.  jax itself
+    warns per unusable donated buffer; any such warning is a failure.
+
+    Write-only *scalar* slots (a threshold diagnostic recomputed every
+    step) are DCE-pruned from the lowered signature and tolerated; a
+    pruned *array* leaf is dead state riding the carry and fails."""
+    avals = _avals(carry)
+    leaves = jax.tree.leaves(carry)
+    n_leaves = len(leaves)
+    try:
+        unread = _unread_carry_leaves(pd, avals, ids)
+    except Exception:  # reprolint: allow(broad-except) DCE is best-effort
+        unread = []
+    dead_arrays = [i for i in unread if np.size(leaves[i]) > 1]
+    if dead_arrays:
+        rep.errors.append(
+            f"carry leaves {dead_arrays} are written but never read — "
+            "dead array state rides (and recompiles) every step"
+        )
+        return
+    n_expected = n_leaves - len(unread)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        try:
+            lowered = jax.jit(pd.step, donate_argnums=(0,)).lower(
+                avals, ids
+            )
+        except Exception as e:  # reprolint: allow(broad-except) recorded as contract error
+            rep.errors.append(f"donated lowering failed: {e}")
+            return
+        text = lowered.as_text()
+    unusable = [
+        str(w.message)
+        for w in caught
+        if "donated" in str(w.message).lower()
+    ]
+    if unusable:
+        rep.errors.append(
+            f"donation not honored for some carry leaves: {unusable[0]}"
+        )
+        return
+    n_alias = text.count("tf.aliasing_output")
+    if n_alias < n_expected:
+        rep.errors.append(
+            f"only {n_alias}/{n_expected} read carry leaves alias an "
+            "output buffer in the lowered module — donation partially "
+            "dropped"
+        )
+        return
+    if unread:
+        rep.checks.append(
+            f"donation-honored ({len(unread)} write-only scalar slot(s) "
+            "pruned)"
+        )
+    else:
+        rep.checks.append("donation-honored")
+
+
+def check_policy_def(
+    kind: str,
+    options: Optional[Dict[str, Any]] = None,
+    *,
+    catalog_size: int = DEFAULT_N,
+    capacity: int = DEFAULT_C,
+    window: int = DEFAULT_W,
+) -> ContractReport:
+    """Run every contract check against one registered kind."""
+    from repro.cachesim import api
+
+    options = dict(options or {})
+    rep = ContractReport(kind=kind, options=options)
+    try:
+        pd = api.policy_def(kind, **options)
+    except Exception as e:  # reprolint: allow(broad-except) recorded as contract error
+        rep.errors.append(f"policy_def({kind!r}, {options}) failed: {e}")
+        return rep
+    if pd.kind != kind:
+        rep.errors.append(
+            f"PolicyDef.kind is {pd.kind!r}, registered as {kind!r}"
+        )
+    _check_signatures(pd, rep)
+    built = _build_carry(pd, catalog_size, capacity, window, rep)
+    carry, requires_sizes, eta = built
+    if carry is None:
+        return rep
+    rep.checks.append("init")
+    ids = _ids_aval(pd, catalog_size, window)
+    out = _check_carry_stability(pd, carry, ids, rep)
+    if out is not None:
+        _check_step_out(out, rep)
+    _check_vmappable(pd, carry, ids, rep)
+    _check_donation(pd, carry, ids, rep)
+    try:
+        _probe_rejections(
+            pd, catalog_size, capacity, window, eta, requires_sizes, rep
+        )
+    except Exception as e:  # reprolint: allow(broad-except) probe crash = contract failure
+        rep.errors.append(f"sizes/costs rejection probe crashed: {e}")
+    return rep
+
+
+def check_all(
+    kinds: Optional[Sequence[str]] = None,
+    *,
+    include_flavors: bool = True,
+    catalog_size: int = DEFAULT_N,
+    capacity: int = DEFAULT_C,
+    window: int = DEFAULT_W,
+) -> List[ContractReport]:
+    """Check every registered kind (default options), plus the non-default
+    static flavors in :data:`EXTRA_FLAVORS`."""
+    from repro.cachesim import api
+
+    reports = []
+    for kind in kinds if kinds is not None else api.policy_def_kinds():
+        reports.append(
+            check_policy_def(
+                kind,
+                catalog_size=catalog_size,
+                capacity=capacity,
+                window=window,
+            )
+        )
+    if include_flavors and kinds is None:
+        for kind, opt_fn in EXTRA_FLAVORS:
+            reports.append(
+                check_policy_def(
+                    kind,
+                    opt_fn(capacity),
+                    catalog_size=catalog_size,
+                    capacity=capacity,
+                    window=window,
+                )
+            )
+    return reports

@@ -1,0 +1,59 @@
+"""File-walking driver for the reprolint AST rules.
+
+Usage from code::
+
+    from repro.analysis.lint import lint_paths
+    findings = lint_paths(["src/repro"])   # List[Finding], sorted
+
+The CLI entry point is ``python -m repro.analysis`` (see ``__main__``),
+which runs this pass plus the dynamic PolicyDef contract checker.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Iterable, List, Optional, Sequence
+
+from repro.analysis.rules import Finding, LintConfig, lint_source
+
+__all__ = ["lint_paths", "lint_file", "iter_python_files"]
+
+#: directories never linted (vendored fixtures carry seeded violations)
+_SKIP_DIRS = {"__pycache__", ".git", ".ruff_cache", "node_modules", "data"}
+
+
+def iter_python_files(paths: Iterable[str]) -> List[str]:
+    """Expand files/directories into a sorted list of .py files."""
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                out.append(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs if d not in _SKIP_DIRS)
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    out.append(os.path.join(root, f))
+    return sorted(set(out))
+
+
+def lint_file(
+    path: str,
+    cfg: Optional[LintConfig] = None,
+    rules: Optional[Sequence[str]] = None,
+) -> List[Finding]:
+    with open(path, "r", encoding="utf-8") as fh:
+        source = fh.read()
+    return lint_source(source, path, cfg=cfg, rules=rules)
+
+
+def lint_paths(
+    paths: Iterable[str],
+    cfg: Optional[LintConfig] = None,
+    rules: Optional[Sequence[str]] = None,
+) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in iter_python_files(paths):
+        findings.extend(lint_file(path, cfg=cfg, rules=rules))
+    return findings

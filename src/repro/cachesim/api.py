@@ -174,6 +174,30 @@ def _sweep_jit(step):
 
 _EXEC_CACHE: dict = {}
 
+#: observers notified once per executable-cache miss (see
+#: repro.analysis.recompile.track_compiles); each gets a small info dict
+_COMPILE_LISTENERS: list = []
+
+
+def add_compile_listener(cb) -> None:
+    """Subscribe ``cb(info: dict)`` to executable-cache misses."""
+    _COMPILE_LISTENERS.append(cb)
+
+
+def remove_compile_listener(cb) -> None:
+    try:
+        _COMPILE_LISTENERS.remove(cb)
+    except ValueError:
+        pass
+
+
+def clear_executable_cache() -> None:
+    """Drop every memoized compiled executable (tests use this to measure
+    cold-path compile counts deterministically).  The jitted wrappers in
+    ``_scan_jit``/``_sweep_jit`` stay cached, so step identities — and
+    therefore cache keys — remain stable."""
+    _EXEC_CACHE.clear()
+
 
 def _compiled(jitted, carry, chunks):
     """AOT-compiled executable, memoized on (step, carry/chunk shapes).
@@ -189,6 +213,18 @@ def _compiled(jitted, carry, chunks):
     )
     if key not in _EXEC_CACHE:
         _EXEC_CACHE[key] = jitted.lower(carry, chunks).compile()
+        if _COMPILE_LISTENERS:
+            info = {
+                "name": getattr(
+                    getattr(jitted, "__wrapped__", jitted),
+                    "__name__",
+                    "<jit>",
+                ),
+                "chunks_shape": tuple(chunks.shape),
+                "n_carry_leaves": len(jax.tree.leaves(carry)),
+            }
+            for cb in list(_COMPILE_LISTENERS):
+                cb(info)
     return _EXEC_CACHE[key]
 
 

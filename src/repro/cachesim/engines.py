@@ -46,9 +46,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.cachesim.replay import sample_chunk_metrics
-from repro.cachesim.results import RunResult, SweepResult, find_combo
+from repro.cachesim.results import RunResult, SweepResult
 from repro.core.ftpl import ftpl_initial_top_c, ftpl_noise, theoretical_zeta
-from repro.core.omd import theoretical_eta_omd
 from repro.jaxcache.fractional import warm_bracket_hi
 
 _I32_MAX = np.int32(np.iinfo(np.int32).max)

@@ -25,18 +25,14 @@ from __future__ import annotations
 
 import functools
 import warnings
-from typing import Dict, List, NamedTuple, Optional, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.cachesim.results import (
-    RunResult,
-    SweepResult,
-    find_combo,
-)
+from repro.cachesim.results import RunResult, SweepResult
 from repro.jaxcache.fractional import (
     DEFAULT_BISECT_ITERS,
     DEFAULT_WARM_SWEEPS,

@@ -47,6 +47,10 @@ stream resumes when chunks flow again.
 
 from __future__ import annotations
 
+# the ingest thread is the SOLE writer of these _StreamState counters;
+# the main thread reads them only after joining (single-writer contract)
+# reprolint: thread-owned(t_ingested, ingest_seconds, t_dropped)
+
 import os
 import queue
 import threading
@@ -503,8 +507,8 @@ def run_stream(
                     if not _put(seg):
                         return
                 _put(_DONE)
-            except BaseException as e:  # forwarded; classified by the main
-                _put(e)  # thread (source fault vs validation error)
+            except BaseException as e:  # reprolint: allow(broad-except) forwarded; classified by main
+                _put(e)  # (source fault vs validation error)
 
         worker = threading.Thread(
             target=_ingest, name="run_stream-ingest", daemon=True

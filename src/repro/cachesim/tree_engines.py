@@ -158,7 +158,6 @@ def make_lru_tree_chunk(catalog_size: int, m: int,
     radix = RING_RADIX
     sh = radix.bit_length() - 1
     offs = pt.tree_offsets(m, radix)
-    sizes = pt.tree_sizes(m, radix)
     nlev = len(offs)
 
     def compact(tree, last, pos, cap):

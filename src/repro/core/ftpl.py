@@ -50,6 +50,8 @@ def ftpl_initial_top_c(noise: np.ndarray, capacity: int) -> np.ndarray:
 
 class FTPL:
     name = "FTPL"
+    __slots__ = ("N", "C", "zeta", "_noise", "_counts", "cached",
+                 "_order", "hits", "requests")
 
     def __init__(
         self,

@@ -25,6 +25,9 @@ class OGBClassic:
     """Eager-projection gradient policy, fractional or integral (Madow)."""
 
     name = "OGB_cl"
+    __slots__ = ("N", "C", "B", "eta", "integral", "rng", "f", "_counts",
+                 "_pending", "cached", "hits", "requests",
+                 "fractional_reward", "replacements")
 
     def __init__(
         self,

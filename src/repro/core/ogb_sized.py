@@ -22,8 +22,7 @@ Correctness: property-tested against the eager weighted-projection oracle
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -115,6 +114,8 @@ class SizedOGB:
     """
 
     name = "SizedOGB"
+    __slots__ = ("s", "K", "item_class", "C", "eta", "R", "f_tilde",
+                 "z", "mass")
 
     def __init__(
         self,

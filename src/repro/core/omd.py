@@ -23,7 +23,7 @@ no-regret baseline in the small-C regime.
 from __future__ import annotations
 
 import math
-from typing import Optional, Set, Tuple
+from typing import Optional, Set
 
 import numpy as np
 
@@ -96,6 +96,9 @@ class OMDClassic:
     """
 
     name = "OMD"
+    __slots__ = ("N", "C", "B", "eta", "integral", "rng", "w", "f",
+                 "_counts", "_pending", "cached", "hits", "requests",
+                 "fractional_reward")
 
     def __init__(
         self,

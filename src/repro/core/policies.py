@@ -8,12 +8,14 @@ GDS (Cao & Irani 1997): O(log C).  All expose the simulator interface
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Dict, Optional
+from typing import Dict
 
 from .treap import make_store
 
 
 class _Base:
+    __slots__ = ("N", "C", "hits", "requests")
+
     def __init__(self, catalog_size: int, capacity: int, **_):
         self.N = int(catalog_size)
         self.C = int(capacity)
@@ -31,6 +33,7 @@ class _Base:
 
 class LRU(_Base):
     name = "LRU"
+    __slots__ = ("_od",)
 
     def __init__(self, catalog_size: int, capacity: int, **kw):
         super().__init__(catalog_size, capacity)
@@ -55,6 +58,7 @@ class LRU(_Base):
 
 class FIFO(_Base):
     name = "FIFO"
+    __slots__ = ("_od",)
 
     def __init__(self, catalog_size: int, capacity: int, **kw):
         super().__init__(catalog_size, capacity)
@@ -79,6 +83,7 @@ class LFU(_Base):
     """In-cache LFU with LRU tie-break (perfect-LFU counters kept for all items)."""
 
     name = "LFU"
+    __slots__ = ("_freq", "_cached", "_order", "_tick")
 
     def __init__(self, catalog_size: int, capacity: int, **kw):
         super().__init__(catalog_size, capacity)
@@ -131,6 +136,7 @@ class GDS(_Base):
     sorted-store's smallest item id, matching the device min-pair tree)."""
 
     name = "GDS"
+    __slots__ = ("_L", "_cost", "_prio", "_h", "_order")
 
     def __init__(
         self,
@@ -192,6 +198,7 @@ class ARC(_Base):
     """Adaptive Replacement Cache (Megiddo & Modha, FAST'03) — exact."""
 
     name = "ARC"
+    __slots__ = ("p", "t1", "t2", "b1", "b2")
 
     def __init__(self, catalog_size: int, capacity: int, **kw):
         super().__init__(catalog_size, capacity)

@@ -30,7 +30,7 @@ try:  # pragma: no cover - import guard
     from sortedcontainers import SortedList
 
     _HAVE_SORTEDCONTAINERS = True
-except Exception:  # pragma: no cover
+except ImportError:  # pragma: no cover
     _HAVE_SORTEDCONTAINERS = False
 
     import bisect
@@ -42,6 +42,8 @@ except Exception:  # pragma: no cover
         runs should prefer the treap engine (``make_store`` already falls back
         to it) or install sortedcontainers.
         """
+
+        __slots__ = ("_l",)
 
         def __init__(self):
             self._l = []
@@ -97,6 +99,8 @@ class Treap:
     Duplicate keys are allowed; ties are broken arbitrarily but deterministically
     per (key, item) pair so ``remove`` can find the exact entry.
     """
+
+    __slots__ = ("_root", "_rng")
 
     def __init__(self, seed: int = 0):
         self._root: Optional[_Node] = None
@@ -221,6 +225,8 @@ class Treap:
 
 class SortedKeyStore:
     """sortedcontainers-backed drop-in with the same API as :class:`Treap`."""
+
+    __slots__ = ("_sl",)
 
     def __init__(self, seed: int = 0):  # seed ignored; signature parity
         self._sl = SortedList()

@@ -14,8 +14,7 @@ deployment shape for a CDN fleet.
 
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

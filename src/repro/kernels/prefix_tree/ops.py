@@ -24,7 +24,6 @@ int32 via :func:`sortable_f32` and composite keys are (hi, lo) pairs.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

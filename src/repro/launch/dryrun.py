@@ -29,7 +29,7 @@ import re
 import sys
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import numpy as np
 
@@ -96,14 +96,12 @@ def build_step(arch_name: str, shape_name: str, mesh, multi_pod: bool):
     from repro.dist.sharding import default_rules, use_sharding
     from repro.models.model import (
         decode_step,
-        forward_train,
-        init_cache,
         init_params,
         input_specs,
         prefill,
     )
     from repro.train.optimizer import OptimizerConfig
-    from repro.train.train_step import TrainState, create_train_state, make_train_step
+    from repro.train.train_step import create_train_state, make_train_step
 
     cfg = get_arch(arch_name)
     shape = SHAPES[shape_name]
@@ -185,7 +183,7 @@ def run_cell(
             try:
                 v = obj[key] if isinstance(obj, dict) else getattr(obj, key, None)
                 return float(v) if v is not None else None
-            except Exception:
+            except (TypeError, ValueError, KeyError, AttributeError):
                 return None
 
         result.update(
@@ -211,7 +209,7 @@ def run_cell(
                 "hlo_n_lines": hlo.count("\n"),
             }
         )
-    except Exception as e:  # recorded, not fatal to the sweep
+    except Exception as e:  # reprolint: allow(broad-except) recorded, not fatal to the sweep
         result.update(
             {
                 "ok": False,
@@ -275,7 +273,7 @@ def run_cache_cell(mesh_kind: str, out_dir: str = RESULTS_DIR) -> Dict[str, Any]
                 "compile_s": round(time.time() - t0, 2),
             }
         )
-    except Exception as e:
+    except Exception as e:  # reprolint: allow(broad-except) recorded, not fatal to the sweep
         result.update({"ok": False, "error": f"{type(e).__name__}: {e}",
                        "traceback": traceback.format_exc()[-3000:]})
     os.makedirs(out_dir, exist_ok=True)

@@ -15,13 +15,12 @@ from __future__ import annotations
 import argparse
 import time
 
-import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_arch, get_smoke
-from repro.dist.fault import FaultConfig, StragglerMonitor
+from repro.dist.fault import StragglerMonitor
 from repro.dist.sharding import default_rules, use_sharding
 from repro.train.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.train.data import DataConfig, SyntheticLM

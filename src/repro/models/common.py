@@ -7,7 +7,6 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.dist.sharding import shard
 
 
 def dtype_of(name: str):

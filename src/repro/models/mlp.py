@@ -5,7 +5,6 @@ from __future__ import annotations
 from typing import Dict
 
 import jax
-import jax.numpy as jnp
 
 from repro.dist.sharding import shard
 

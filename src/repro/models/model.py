@@ -19,8 +19,7 @@ Public API (used by train/serve/launch):
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +31,6 @@ from .attention import (
     attention_decode,
     attention_forward,
     init_attention,
-    init_kv_cache,
     project_cross_kv,
 )
 from .common import dtype_of, embed_init, rmsnorm, rmsnorm_init, softmax_cross_entropy
@@ -310,7 +308,6 @@ def _decoder_encdec_forward(cfg, params, tokens, enc_out):
     B, S = tokens.shape
     x = params["embed"][tokens].astype(cdt) + params["dec_pos"][:S].astype(cdt)
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
-    enc_positions = jnp.broadcast_to(jnp.arange(enc_out.shape[1]), enc_out.shape[:2])
 
     def block(x, p):
         h = rmsnorm(x, p["ln1"])
@@ -504,7 +501,6 @@ def decode_step(
         return logits, new_cache
 
     if cfg.family == "encdec":
-        S = x.shape[1]
         positions = jnp.broadcast_to(pos, (B, 1))
         x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, 0).astype(cdt)
 

@@ -15,10 +15,9 @@ batched integral-caching setting.
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
 
-import numpy as np
 
 
 def page_keys(tokens: Sequence[int], page_size: int) -> List[bytes]:

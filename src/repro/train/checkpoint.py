@@ -120,7 +120,7 @@ class AsyncCheckpointer:
             try:
                 save_checkpoint(self.directory, step, host_tree, extra)
                 self._prune()
-            except BaseException as e:  # surfaced on next wait()
+            except BaseException as e:  # reprolint: allow(broad-except) surfaced on next wait()
                 self._error = e
 
         self._thread = threading.Thread(target=_write, daemon=True)

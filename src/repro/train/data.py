@@ -16,11 +16,10 @@ which shards to "prefetch" (simulated).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator
 
 import numpy as np
 
-import jax.numpy as jnp
 
 
 @dataclass

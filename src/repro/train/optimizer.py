@@ -7,9 +7,8 @@ lets kimi-k2 train_4k fit 512 chips — EXPERIMENTS.md §Dry-run).
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

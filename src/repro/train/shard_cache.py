@@ -15,7 +15,6 @@ object the serving page pool uses), so the pipeline integration is: call
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 from repro.core.ogb import OGB
 

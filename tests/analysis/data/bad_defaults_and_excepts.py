@@ -1,0 +1,42 @@
+"""Fixture: RL004 mutable defaults and RL006 broad excepts."""
+
+
+def accumulate(x, seen=[]):  # VIOLATION RL004 (list default)
+    seen.append(x)
+    return seen
+
+
+def lookup(key, table={}):  # VIOLATION RL004 (dict default)
+    return table.get(key)
+
+
+def clean(key, table=None):
+    return (table or {}).get(key)
+
+
+def swallow(fn):
+    try:
+        return fn()
+    except:  # VIOLATION RL006 (bare except)
+        return None
+
+
+def swallow_broad(fn):
+    try:
+        return fn()
+    except Exception:  # VIOLATION RL006 (no re-raise)
+        return None
+
+
+def wrap_and_reraise(fn):
+    try:
+        return fn()
+    except Exception as e:  # clean: re-raises
+        raise RuntimeError("wrapped") from e
+
+
+def annotated(fn):
+    try:
+        return fn()
+    except Exception:  # reprolint: allow(broad-except) fixture shows the escape hatch
+        return None

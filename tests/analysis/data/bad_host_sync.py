@@ -1,0 +1,25 @@
+"""Fixture: RL001/RL002 violations inside traced functions.
+
+Syntactically valid, deliberately broken; reprolint's tests assert on the
+exact (rule, line) pairs.  Never imported.
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def step(carry, ids):  # traced via the PolicyDef name hint
+    f = carry
+    print("debug", ids)  # VIOLATION RL001 (print)
+    x = f.item()  # VIOLATION RL001 (.item)
+    jax.block_until_ready(f)  # VIOLATION RL001 (block_until_ready)
+    y = float(f)  # VIOLATION RL001 (float on tracer)
+    z = np.asarray(f)  # VIOLATION RL002 (numpy on tracer)
+    return f + x + y + jnp.sum(z), jnp.sum(ids)
+
+
+def update_step(carry, ids):  # traced via the _step suffix hint
+    ok = int(ids.shape[0])  # clean: .shape is static
+    n = len(carry)  # clean: len() launders
+    return carry, ok + n

@@ -1,0 +1,30 @@
+"""Fixture: RL007 thread-shared-write violations (direct and transitive)."""
+import threading
+
+
+class State:
+    def __init__(self):
+        self.count = 0
+        self.done = False
+        self.owned = 0
+
+
+def _helper(st):
+    st.count += 1  # VIOLATION RL007 (reached transitively from the target)
+
+
+def _worker(st):
+    _helper(st)
+    st.done = True  # VIOLATION RL007 (written from the thread target)
+    st.owned += 1  # clean: declared below
+    # reprolint: thread-owned(owned)
+
+
+def launch(st):
+    t = threading.Thread(target=_worker, args=(st,))
+    t.start()
+    return t
+
+
+def not_threaded(st):
+    st.count = 0  # clean: not reachable from any Thread target

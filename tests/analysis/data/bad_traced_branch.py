@@ -1,0 +1,38 @@
+"""Fixture: RL003 traced-branch violations (and laundered non-violations)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def threshold(x, limit):
+    if x > limit:  # VIOLATION RL003 (if on tracer)
+        return x
+    while x < limit:  # VIOLATION RL003 (while on tracer)
+        x = x + 1.0
+    assert x >= 0  # VIOLATION RL003 (assert on tracer)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def dispatch(x, mode):
+    if mode == "fast":  # clean: static_argnames param
+        return x * 2.0
+    if x.shape[0] > 4:  # clean: .shape is static
+        return x
+    if mode is None:  # clean: identity test
+        return -x
+    return jnp.abs(x)
+
+
+def make_update_step(kind):
+    if kind == "bad":  # clean: factory prefix, host config dispatch
+        scale = 2.0
+    else:
+        scale = 1.0
+
+    def step(carry, ids):
+        return carry * scale, jnp.sum(ids)
+
+    return step

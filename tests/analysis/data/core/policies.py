@@ -1,0 +1,34 @@
+"""Fixture: RL005 slots violations — path mimics a hot-path module
+(matched by the `*/core/policies.py` glob)."""
+from dataclasses import dataclass
+from typing import NamedTuple
+
+
+class HotPolicy:  # VIOLATION RL005 (no __slots__)
+    def __init__(self):
+        self.hits = 0
+
+
+@dataclass
+class HotRecord:  # VIOLATION RL005 (dataclass without slots=True)
+    hits: int
+
+
+class SlottedPolicy:  # clean
+    __slots__ = ("hits",)
+
+    def __init__(self):
+        self.hits = 0
+
+
+@dataclass(slots=True)
+class SlottedRecord:  # clean
+    hits: int
+
+
+class CarryOut(NamedTuple):  # clean: NamedTuple is exempt
+    reward: float
+
+
+class PolicyError(Exception):  # clean: exception types are exempt
+    pass

@@ -1,0 +1,18 @@
+"""Fixture: RL008 float64 hazards — path mimics a kernel entry point
+(matched by the `*/kernels/*/ops.py` glob)."""
+import numpy as np
+
+import jax.numpy as jnp
+
+
+def promote(x):
+    a = jnp.zeros(4, jnp.float64)  # VIOLATION RL008 (jnp.float64)
+    b = np.float64(1.0)  # VIOLATION RL008 (np.float64)
+    c = x.astype("float64")  # VIOLATION RL008 ('float64' string)
+    d = jnp.asarray(x, dtype=float)  # VIOLATION RL008 (dtype=float)
+    e = x.astype(float)  # VIOLATION RL008 (.astype(float))
+    return a, b, c, d, e
+
+
+def stay_f32(x):
+    return jnp.asarray(x, jnp.float32)  # clean

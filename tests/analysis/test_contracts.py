@@ -1,0 +1,236 @@
+"""PolicyDef contract checker: clean registry passes, seeded breakage fails.
+
+The positive half is the CI gate itself (every registered kind and flavor
+passes all checks without a device step).  The negative half registers
+deliberately broken PolicyDefs — dtype-drifting carries, dropped StepOut
+fields, silently-accepted sizes — and asserts the checker names the exact
+contract each one breaks.
+"""
+
+from typing import NamedTuple
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import check_all, check_policy_def
+from repro.analysis.contracts import COST_MODEL_KINDS, EXTRA_FLAVORS
+from repro.cachesim import api
+from repro.core.policies import ENGINE_DEFS
+
+
+# ---------------------------------------------------------------------------
+# positive: the live registry
+# ---------------------------------------------------------------------------
+def test_every_registered_kind_passes():
+    reports = check_all(include_flavors=True)
+    bad = [str(r) for r in reports if not r.ok]
+    assert not bad, "\n".join(bad)
+    kinds = {r.kind for r in reports}
+    assert kinds == set(api.policy_def_kinds())
+
+
+def test_flavor_matrix_covers_tree_and_sized_kinds():
+    flavored = {k for k, _ in EXTRA_FLAVORS}
+    assert {"ogb", "ogb_sized", "lru", "lfu", "ftpl"} <= flavored
+    assert {"ogb_sized", "gds"} <= set(api.policy_def_kinds())
+    assert COST_MODEL_KINDS <= set(api.policy_def_kinds())
+
+
+def test_checks_stay_abstract():
+    """The gate never executes a policy step on device: carry stability is
+    asserted via ``jax.eval_shape`` over ``ShapeDtypeStruct`` avals and
+    donation via ``jit(...).lower()``, so checking a kind with a huge
+    catalog must stay instant (it would OOM/stall if steps ran)."""
+    reports = check_all(
+        kinds=["ogb", "lru", "gds"], catalog_size=2_000_003, capacity=4096
+    )
+    assert all(r.ok for r in reports), [str(r) for r in reports]
+
+
+# ---------------------------------------------------------------------------
+# negative: seeded contract breakage, checked via a temp registration
+# ---------------------------------------------------------------------------
+class _Carry(NamedTuple):
+    f: jax.Array
+    t: jax.Array
+
+
+def _register(kind, pd):
+    ENGINE_DEFS[kind] = lambda **kw: pd
+
+
+@pytest.fixture
+def scratch_registry():
+    added = []
+
+    def add(kind, pd):
+        _register(kind, pd)
+        added.append(kind)
+
+    yield add
+    for kind in added:
+        ENGINE_DEFS.pop(kind, None)
+
+
+def _base_init(catalog_size, capacity, *, seed=0, eta=None, horizon=None,
+               n_slots=None, sizes=None, costs=None):
+    if sizes is not None or costs is not None:
+        raise ValueError("unit-size test policy")
+    return _Carry(
+        f=jnp.zeros(catalog_size, jnp.float32),
+        t=jnp.zeros((), jnp.int32),
+    )
+
+
+def _out(reward, hits, occ):
+    return api.StepOut(
+        jnp.float32(reward), jnp.int32(hits), jnp.float32(0.0),
+        jnp.float32(occ),
+    )
+
+
+def test_dtype_drift_is_caught(scratch_registry):
+    def step(carry, ids):
+        # t drifts int32 -> float32: scan rejects it, cache misses forever
+        return _Carry(carry.f, carry.t + 1.0), _out(0.0, 0, 0.0)
+
+    scratch_registry(
+        "broken_dtype",
+        api.PolicyDef(kind="broken_dtype", name="X", init=_base_init,
+                      step=step),
+    )
+    rep = check_policy_def("broken_dtype")
+    assert not rep.ok
+    assert any("dtype" in e or "leaf" in e for e in rep.errors), rep.errors
+
+
+def test_treedef_change_is_caught(scratch_registry):
+    def step(carry, ids):
+        return (carry.f, carry.t + 1), _out(0.0, 0, 0.0)  # tuple != _Carry
+
+    scratch_registry(
+        "broken_tree",
+        api.PolicyDef(kind="broken_tree", name="X", init=_base_init,
+                      step=step),
+    )
+    rep = check_policy_def("broken_tree")
+    assert not rep.ok
+    assert any("treedef" in e for e in rep.errors), rep.errors
+
+
+def test_shape_drift_is_caught(scratch_registry):
+    def step(carry, ids):
+        return _Carry(jnp.pad(carry.f, (0, 1)), carry.t + 1), _out(
+            0.0, 0, 0.0
+        )
+
+    scratch_registry(
+        "broken_shape",
+        api.PolicyDef(kind="broken_shape", name="X", init=_base_init,
+                      step=step),
+    )
+    rep = check_policy_def("broken_shape")
+    assert not rep.ok
+
+
+def test_bad_stepout_dtype_is_caught(scratch_registry):
+    def step(carry, ids):
+        out = api.StepOut(
+            jnp.float64(0.0) if jax.config.jax_enable_x64
+            else jnp.int32(0),  # reward must be f32
+            jnp.int32(0), jnp.float32(0.0), jnp.float32(0.0),
+        )
+        return _Carry(carry.f, carry.t + 1), out
+
+    scratch_registry(
+        "broken_out",
+        api.PolicyDef(kind="broken_out", name="X", init=_base_init,
+                      step=step),
+    )
+    rep = check_policy_def("broken_out")
+    assert not rep.ok
+    assert any("reward" in e for e in rep.errors), rep.errors
+
+
+def test_silently_dropped_sizes_are_caught(scratch_registry):
+    def init(catalog_size, capacity, *, seed=0, eta=None, horizon=None,
+             n_slots=None, sizes=None, costs=None):
+        if costs is not None:
+            raise ValueError("no cost model")
+        return _Carry(  # accepts sizes=... but never uses them
+            f=jnp.zeros(catalog_size, jnp.float32),
+            t=jnp.zeros((), jnp.int32),
+        )
+
+    def step(carry, ids):
+        return _Carry(carry.f, carry.t + 1), _out(0.0, 0, 0.0)
+
+    scratch_registry(
+        "broken_sized",
+        api.PolicyDef(kind="broken_sized", name="X", init=init, step=step),
+    )
+    rep = check_policy_def("broken_sized")
+    assert not rep.ok
+    assert any("byte_hits" in e or "silently" in e for e in rep.errors), (
+        rep.errors
+    )
+
+
+def test_bad_init_signature_is_caught(scratch_registry):
+    def init(n, c, seed=0):  # wrong positional names, missing kwargs
+        return _Carry(jnp.zeros(n, jnp.float32), jnp.zeros((), jnp.int32))
+
+    def step(carry, ids):
+        return _Carry(carry.f, carry.t + 1), _out(0.0, 0, 0.0)
+
+    scratch_registry(
+        "broken_sig",
+        api.PolicyDef(kind="broken_sig", name="X", init=init, step=step),
+    )
+    rep = check_policy_def("broken_sig")
+    assert not rep.ok
+    assert any("init" in e for e in rep.errors), rep.errors
+
+
+def test_dead_array_state_is_caught(scratch_registry):
+    class _Fat(NamedTuple):
+        f: jax.Array
+        ghost: jax.Array  # written fresh, never read — dead array state
+        t: jax.Array
+
+    def init(catalog_size, capacity, *, seed=0, eta=None, horizon=None,
+             n_slots=None, sizes=None, costs=None):
+        if sizes is not None or costs is not None:
+            raise ValueError("unit-size test policy")
+        return _Fat(
+            f=jnp.zeros(catalog_size, jnp.float32),
+            ghost=jnp.zeros(catalog_size, jnp.float32),
+            t=jnp.zeros((), jnp.int32),
+        )
+
+    def step(carry, ids):
+        return _Fat(
+            carry.f,
+            jnp.zeros_like(carry.f),  # rebuilt without reading the old one
+            carry.t + 1,
+        ), _out(0.0, 0, 0.0)
+
+    scratch_registry(
+        "broken_dead",
+        api.PolicyDef(kind="broken_dead", name="X", init=init, step=step),
+    )
+    rep = check_policy_def("broken_dead")
+    assert not rep.ok
+    assert any("never read" in e for e in rep.errors), rep.errors
+
+
+def test_costs_on_cost_blind_kind_must_reject():
+    """The live unit-size kinds all reject costs= loudly."""
+    with pytest.raises(ValueError):
+        api.policy_def("ogb").init(
+            16, 4, seed=0, eta=0.05, horizon=64, n_slots=None,
+            costs=np.ones(16),
+        )

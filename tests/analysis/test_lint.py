@@ -1,0 +1,154 @@
+"""reprolint's AST rules against seeded-violation fixtures.
+
+Each fixture under ``data/`` marks its violations inline with
+``# VIOLATION RLxxx`` comments; the tests derive the expected (rule, line)
+set from those markers, so fixture and expectation cannot drift apart.
+Every marked line must be flagged, nothing unmarked may fire, and the
+whole production tree must stay clean (the CI gate's exit-0 contract).
+"""
+
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import lint_paths, lint_source
+from repro.analysis.rules import RULES
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+SRC = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(__file__))),
+    "src",
+    "repro",
+)
+
+_MARK = re.compile(r"#\s*VIOLATION\s+(RL\d{3})")
+
+
+def _expected(path):
+    out = set()
+    with open(path) as fh:
+        for lineno, text in enumerate(fh, start=1):
+            for m in _MARK.finditer(text):
+                out.add((m.group(1), lineno))
+    return out
+
+
+def _fixture_paths():
+    for root, dirs, files in os.walk(DATA):
+        dirs[:] = [d for d in dirs if d != "__pycache__"]
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                yield os.path.join(root, fn)
+
+
+@pytest.mark.parametrize(
+    "path", list(_fixture_paths()), ids=lambda p: os.path.relpath(p, DATA)
+)
+def test_fixture_violations_exactly_match_markers(path):
+    expected = _expected(path)
+    assert expected, f"fixture {path} declares no VIOLATION markers"
+    findings = lint_source(open(path).read(), path)
+    got = {(f.rule, f.line) for f in findings}
+    missed = expected - got
+    spurious = got - expected
+    assert not missed, f"rules failed to fire: {sorted(missed)}"
+    assert not spurious, (
+        f"rules fired on unmarked lines: {sorted(spurious)}\n"
+        + "\n".join(str(f) for f in findings)
+    )
+
+
+def test_every_rule_is_exercised_by_some_fixture():
+    covered = set()
+    for path in _fixture_paths():
+        covered |= {r for r, _ in _expected(path)}
+    assert covered == set(RULES), (
+        f"rules without a seeded fixture: {sorted(set(RULES) - covered)}"
+    )
+
+
+def test_allow_suppression_is_line_scoped():
+    src = (
+        "def f(fn):\n"
+        "    try:\n"
+        "        return fn()\n"
+        "    except Exception:  # reprolint: allow(broad-except) why\n"
+        "        pass\n"
+        "def g(fn):\n"
+        "    try:\n"
+        "        return fn()\n"
+        "    except Exception:\n"
+        "        pass\n"
+    )
+    findings = lint_source(src, "x.py")
+    assert [f.line for f in findings if f.rule == "RL006"] == [9]
+
+
+def test_allow_accepts_rule_id_and_slug():
+    for tag in ("RL006", "broad-except"):
+        src = (
+            "def f(fn):\n"
+            "    try:\n"
+            "        return fn()\n"
+            f"    except Exception:  # reprolint: allow({tag}) why\n"
+            "        pass\n"
+        )
+        assert lint_source(src, "x.py") == []
+
+
+def test_rule_filter_restricts_output():
+    path = os.path.join(DATA, "bad_defaults_and_excepts.py")
+    findings = lint_source(open(path).read(), path, rules=["RL004"])
+    assert findings and all(f.rule == "RL004" for f in findings)
+
+
+def test_clean_code_is_silent():
+    src = (
+        "import jax.numpy as jnp\n"
+        "def step(carry, ids):\n"
+        "    counts = jnp.zeros(8).at[ids].add(1.0)\n"
+        "    f = carry + counts\n"
+        "    return f, jnp.sum(f)\n"
+    )
+    assert lint_source(src, "x.py") == []
+
+
+def test_production_tree_is_clean():
+    findings = lint_paths([SRC])
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_lint_paths_skips_fixture_data_dirs():
+    here = os.path.dirname(__file__)
+    assert lint_paths([here]) == []
+
+
+def test_cli_exit_codes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.dirname(__file__))), "src"
+    )
+    ok = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--no-contracts", SRC],
+        env=env,
+        capture_output=True,
+        text=True,
+    )
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    bad = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "repro.analysis",
+            "--no-contracts",
+            os.path.join(DATA, "bad_host_sync.py"),
+        ],
+        env=env,
+        capture_output=True,
+        text=True,
+    )
+    assert bad.returncode == 1
+    assert "RL001" in bad.stdout

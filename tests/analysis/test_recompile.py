@@ -1,0 +1,101 @@
+"""Recompilation regression: the documented compile counts, enforced.
+
+The perf story of the execution layer is a compile-count story:
+``run_stream`` re-batches any trace into fixed-shape segments so a whole
+stream costs two executable compiles (steady + tail), resuming via
+``api.run(carry=...)`` costs zero, and a full parameter sweep costs one.
+``track_compiles`` observes the executable-cache misses (and jax's own
+``log_compiles`` stream) without touching the computation; these tests
+pin the counts so a carry-layout or cache-keying regression fails loudly
+instead of silently recompiling every segment.
+
+Geometry note: jit caches persist process-wide, so each test uses a
+unique (catalog, window) pair — its shapes are traced nowhere else in
+the suite.
+"""
+
+
+from repro.analysis import track_compiles
+from repro.cachesim import api
+from repro.cachesim.tracelab import run_stream
+from repro.cachesim.traces import zipf
+
+
+def _trace(n, t, seed):
+    return zipf(n, t, alpha=0.8, seed=seed)
+
+
+def test_run_stream_two_compiles_steady_plus_tail():
+    n, c, w = 101, 7, 19
+    seg = 3 * w  # 3 windows per steady segment
+    trace = _trace(n, 4 * seg + 2 * w, seed=11)  # 4 segments + 2-window tail
+    pd = api.policy_def("ogb")
+
+    api.clear_executable_cache()
+    with track_compiles() as log:
+        sr = run_stream(
+            pd, [trace], n, c, window=w, segment_len=seg, eta=0.05,
+            horizon=trace.size, prefetch=2,
+        )
+    assert sr.T == trace.size  # 4*seg + 2*w is an exact multiple of w
+    # 4 same-shape steady segments share one executable; the shorter tail
+    # segment compiles once more
+    log.assert_executables(2)
+    assert all(e.name == "run_fn" for e in log.executables)
+    # jax's log_compiles stream agrees (shapes unique to this test)
+    assert log.trace_count("run_fn") == 2
+
+
+def test_resume_from_carry_zero_recompiles():
+    n, c, w = 103, 9, 23
+    pd = api.policy_def("ogb")
+    t1 = _trace(n, 8 * w, seed=3)
+    t2 = _trace(n, 8 * w, seed=4)
+
+    first = api.run(pd, t1, n, c, window=w, eta=0.05, keep_carry=True)
+    with track_compiles() as log:
+        second = api.run(pd, t2, window=w, carry=first.carry)
+    assert second.T == t2.size
+    log.assert_no_recompilation()
+    assert log.trace_count("run_fn") == 0
+
+
+def test_sweep_is_one_compile():
+    n, w = 107, 29
+    trace = _trace(n, 6 * w, seed=7)
+    pd = api.policy_def("ogb")
+
+    api.clear_executable_cache()
+    with track_compiles() as log:
+        sw = api.sweep(
+            pd, trace, n, capacities=[5, 11], etas=[0.02, 0.05, 0.1],
+            window=w, track_opt=False,
+        )
+    assert len(sw.combos) == 6
+    log.assert_executables(1)
+    assert log.executables[0].name == "one"
+
+
+def test_same_shape_rerun_hits_the_cache():
+    n, c, w = 109, 5, 31
+    pd = api.policy_def("lru")
+    trace = _trace(n, 4 * w, seed=9)
+
+    api.clear_executable_cache()
+    with track_compiles() as log:
+        api.run(pd, trace, n, c, window=w)
+        api.run(pd, trace, n, c, window=w)  # identical shapes: cache hit
+    log.assert_executables(1)
+
+
+def test_tracker_detaches_cleanly():
+    n, c, w = 113, 6, 37
+    pd = api.policy_def("fifo")
+    trace = _trace(n, 2 * w, seed=13)
+    with track_compiles() as outer:
+        with track_compiles() as inner:
+            api.run(pd, trace, n, c, window=w)
+        n_inner = inner.executable_count
+        api.run(pd, trace, n, c, window=w)  # cache hit, no new events
+    assert inner.executable_count == n_inner  # inner sealed after exit
+    assert outer.executable_count >= n_inner  # outer saw at least as much

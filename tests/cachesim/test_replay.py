@@ -13,7 +13,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.cachesim.replay import ReplayCarry, make_replay_fn, replay_trace
+from repro.cachesim.replay import replay_trace
 from repro.cachesim.traces import adversarial, zipf
 from repro.core.projection import capped_simplex_tau, project_capped_simplex
 from repro.core.regret import best_static_hits

@@ -52,7 +52,7 @@ def test_ogb_regret_below_theorem_bound(trace_fn, kw):
     N, C, T = 200, 50, 4000
     trace = trace_fn(N, T, seed=1, **kw)
     ogb = OGB(N, C, horizon=T, batch_size=1, seed=0)
-    res = simulate(ogb, trace, window=T)
+    simulate(ogb, trace, window=T)
     # fractional regret is what Theorem 3.1 bounds; hits fluctuate around it
     opt = best_static_hits(trace, C)
     frac_regret = opt - ogb.stats.fractional_reward

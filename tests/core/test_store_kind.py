@@ -8,7 +8,7 @@ a different structure mid-run.
 import numpy as np
 
 from repro.core.ogb import OGB
-from repro.core.treap import SortedKeyStore, Treap
+from repro.core.treap import Treap
 
 
 def _drive(ogb, T=60, seed=0):

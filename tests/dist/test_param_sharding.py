@@ -2,7 +2,6 @@
 
 from types import SimpleNamespace
 
-import pytest
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.dist.sharding import (
-    ShardingRules,
     current_mesh,
     current_rules,
     default_rules,

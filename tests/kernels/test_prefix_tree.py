@@ -8,7 +8,6 @@ Pallas block reductions (interpret mode on CPU).
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from hypothesis import given, settings, strategies as st

@@ -14,7 +14,6 @@ from repro.models.model import (
     forward_train,
     init_cache,
     init_params,
-    input_specs,
     padded_vocab,
     prefill,
 )
@@ -97,7 +96,7 @@ def test_prefill_matches_decode(arch):
         enc = _encoder_forward(cfg, params, batch["frames"])
         cks, cvs = [], []
         for i in range(cfg.n_layers):
-            p = jax.tree.map(lambda a: a[i], params["blocks"])
+            p = jax.tree.map(lambda a, i=i: a[i], params["blocks"])
             ck, cv = project_cross_kv(p["cross"], enc, cfg)
             cks.append(ck)
             cvs.append(cv)

@@ -1,10 +1,8 @@
 """Serving: engine end-to-end, OGB prefix cache vs LRU, expert residency."""
 
 import numpy as np
-import pytest
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import get_smoke
 from repro.core.ogb import OGB

@@ -16,7 +16,6 @@ from repro.cachesim.simulator import simulate
 from repro.cachesim.traces import adversarial, shifting_zipf
 from repro.configs.base import get_smoke, list_archs
 from repro.core import LRU, OGB, best_static_hits
-from repro.models.model import init_params
 from repro.serve.engine import ServeEngine
 from repro.serve.kvcache import PagedKVPool
 

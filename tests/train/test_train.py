@@ -1,15 +1,14 @@
 """Training substrate: loss decreases, microbatching equivalence, optimizer."""
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_smoke
 from repro.train.data import DataConfig, SyntheticLM
-from repro.train.optimizer import OptimizerConfig, global_norm, init_optimizer, lr_at
-from repro.train.train_step import TrainState, create_train_state, make_train_step
+from repro.train.optimizer import OptimizerConfig, init_optimizer, lr_at
+from repro.train.train_step import create_train_state, make_train_step
 
 
 def test_lr_schedule():
