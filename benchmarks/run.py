@@ -25,6 +25,7 @@ from . import (
     fig9_occupancy,
     fig10_batched,
     fig11_locality,
+    fleet_scale,
     serving_slo,
     sized_cdn,
     stream_scale,
@@ -46,6 +47,7 @@ SUITES = {
     "serving": serving_slo.main,
     "sized": sized_cdn.main,
     "stream": stream_scale.main,
+    "fleet": fleet_scale.main,
 }
 
 

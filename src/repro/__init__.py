@@ -31,6 +31,13 @@ _LAZY = {
     "RunResult": "repro.cachesim.results",
     "StreamResult": "repro.cachesim.results",
     "SweepResult": "repro.cachesim.results",
+    "FleetResult": "repro.cachesim.results",
+    "EdgeFleetResult": "repro.cachesim.results",
+    # multi-tenant fleet replay (vmapped per-tenant caches)
+    "run_fleet": "repro.cachesim.fleet",
+    "run_fleet_stream": "repro.cachesim.fleet",
+    "run_edge_fleet": "repro.cachesim.fleet",
+    "run_edge_fleet_scenario": "repro.cachesim.fleet",
     # tracelab: trace-file ingestion + out-of-core streaming replay
     "CatalogRemap": "repro.cachesim.tracelab",
     "TraceProfile": "repro.cachesim.tracelab",
@@ -42,6 +49,7 @@ _LAZY = {
     "synthesize": "repro.cachesim.tracelab",
     "synthesize_chunks": "repro.cachesim.tracelab",
     "synthesize_sizes": "repro.cachesim.tracelab",
+    "tenant_streams": "repro.cachesim.tracelab",
     "write_trace": "repro.cachesim.tracelab",
     # host-side policies (the slow exact oracles) + per-request simulator
     "make_policy": "repro.core.policies",
@@ -50,6 +58,8 @@ _LAZY = {
     "compare": "repro.cachesim.simulator",
     # named experiment scenarios and trace families
     "SCENARIOS": "repro.cachesim.scenarios",
+    "EDGE_FLEET_SCENARIOS": "repro.cachesim.scenarios",
+    "get_edge_fleet_scenario": "repro.cachesim.scenarios",
     "get_scenario": "repro.cachesim.scenarios",
     "run_scenario": "repro.cachesim.scenarios",
     "make_trace": "repro.cachesim.traces",

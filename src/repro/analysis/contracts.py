@@ -335,6 +335,88 @@ def _check_vmappable(pd, carry, ids, rep, lanes: int = 3) -> None:
     rep.checks.append("vmappable")
 
 
+def _check_fleet_stacked(
+    pd, carry, requires_sizes, eta, n, c, w, rep, lanes: int = 3
+) -> None:
+    """The fleet contract (:mod:`repro.cachesim.fleet`).
+
+    Two requirements beyond ``_check_vmappable``'s sweep contract:
+
+    1. *Stackable*: carries built with different per-tenant parameters
+       (capacity, seed) under a shared ``n_slots`` pad must agree on
+       treedef and every leaf's shape/dtype — otherwise
+       ``jax.tree.map(jnp.stack, *carries)`` cannot build the tenant axis.
+    2. *Fleet-vmappable*: the stacked carry must vmap through ``step``
+       with **per-tenant** ids (``in_axes=(0, 0)`` — every tenant replays
+       its own stream, unlike the sweep's shared trace), with stable
+       treedef/shapes across the vmapped step.
+    """
+    base = dict(seed=1, eta=eta, horizon=8 * w, n_slots=c)
+    if requires_sizes:
+        base["sizes"] = np.full(n, 2.0, np.float64)
+    try:
+        variant = pd.init(n, max(c // 2, 1), **base)
+    except ValueError:
+        # static-capacity flavors (madow) cannot vary capacity; a seed
+        # variant at the same capacity still probes the stacking contract
+        try:
+            variant = pd.init(n, c, **base)
+        except Exception as e:  # reprolint: allow(broad-except) recorded as contract error
+            rep.errors.append(f"fleet variant init failed: {e}")
+            return
+    except Exception as e:  # reprolint: allow(broad-except) recorded as contract error
+        rep.errors.append(f"fleet variant init failed: {e}")
+        return
+    if jax.tree.structure(variant) != jax.tree.structure(carry):
+        rep.errors.append(
+            "fleet-stacking violation: a capacity/seed variant changed "
+            "the carry treedef — tenants cannot stack"
+        )
+        return
+    sig_a, sig_b = _leaf_sig(carry), _leaf_sig(variant)
+    if sig_a != sig_b:
+        drift = [
+            f"leaf {i}: {a} vs {b}"
+            for i, (a, b) in enumerate(zip(sig_a, sig_b))
+            if a != b
+        ]
+        rep.errors.append(
+            "fleet-stacking violation: carry leaf shapes/dtypes depend on "
+            "per-tenant capacity/seed beyond the shared n_slots pad ("
+            + "; ".join(drift)
+            + ")"
+        )
+        return
+    rep.checks.append("fleet-stackable")
+    stacked = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(
+            (lanes,) + tuple(np.shape(x)), x.dtype
+        ),
+        carry,
+    )
+    ids1 = _ids_aval(pd, n, w)
+    ids = jax.ShapeDtypeStruct((lanes,) + tuple(ids1.shape), ids1.dtype)
+    try:
+        carry2, _out = jax.eval_shape(
+            jax.vmap(pd.step, in_axes=(0, 0)), stacked, ids
+        )
+    except Exception as e:  # reprolint: allow(broad-except) recorded as contract error
+        rep.errors.append(
+            f"step does not vmap with per-tenant ids (in_axes=(0, 0)): {e}"
+        )
+        return
+    if jax.tree.structure(carry2) != jax.tree.structure(carry):
+        rep.errors.append("fleet-vmapped step changed the carry treedef")
+        return
+    if _leaf_sig(carry2) != _leaf_sig(stacked):
+        rep.errors.append(
+            "fleet-vmapped step changed stacked carry leaf shapes/dtypes "
+            "under the tenant axis"
+        )
+        return
+    rep.checks.append("fleet-vmappable")
+
+
 def _unread_carry_leaves(pd, avals, ids):
     """Leaf indices the step never READS (it writes them fresh) — jit
     prunes those inputs at lowering, so they cannot alias an output."""
@@ -445,6 +527,9 @@ def check_policy_def(
     if out is not None:
         _check_step_out(out, rep)
     _check_vmappable(pd, carry, ids, rep)
+    _check_fleet_stacked(
+        pd, carry, requires_sizes, eta, catalog_size, capacity, window, rep
+    )
     _check_donation(pd, carry, ids, rep)
     try:
         _probe_rejections(

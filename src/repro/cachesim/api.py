@@ -172,6 +172,20 @@ def _sweep_jit(step):
     return jax.jit(jax.vmap(one, in_axes=(0, None)), donate_argnums=(0,))
 
 
+@functools.lru_cache(maxsize=None)
+def _fleet_jit(step):
+    """Tenant-vmapped scan: stacked carries (E, ...) x chunks (E, M, W).
+
+    Unlike :func:`_sweep_jit` (one shared trace fanned over combos), every
+    tenant replays its *own* chunk stream — ``in_axes=(0, 0)``.  Memoized so
+    the jitted wrapper's identity keys the executable cache."""
+
+    def one(carry, chunks):
+        return jax.lax.scan(step, carry, chunks)
+
+    return jax.jit(jax.vmap(one, in_axes=(0, 0)), donate_argnums=(0,))
+
+
 _EXEC_CACHE: dict = {}
 
 #: observers notified once per executable-cache miss (see
@@ -194,8 +208,8 @@ def remove_compile_listener(cb) -> None:
 def clear_executable_cache() -> None:
     """Drop every memoized compiled executable (tests use this to measure
     cold-path compile counts deterministically).  The jitted wrappers in
-    ``_scan_jit``/``_sweep_jit`` stay cached, so step identities — and
-    therefore cache keys — remain stable."""
+    ``_scan_jit``/``_sweep_jit``/``_fleet_jit`` stay cached, so step
+    identities — and therefore cache keys — remain stable."""
     _EXEC_CACHE.clear()
 
 

@@ -264,3 +264,128 @@ class SweepResult:
 
     def row(self, **match) -> int:
         return find_combo(self.combos, **match)
+
+
+@dataclass
+class FleetResult:
+    """Host-side view of one multi-tenant fleet replay.
+
+    E independent per-tenant caches stepped in lockstep by one vmapped,
+    donated-carry scan (``api._fleet_jit``): every per-chunk observable
+    gains a leading tenant axis, so ``reward``/``hits``/``aux``/
+    ``occupancy`` are ``(E, M)`` and the scalar ratios aggregate over the
+    whole fleet.  ``T`` is the number of requests replayed *per tenant*
+    (the fleet steps in lockstep, so it is shared); ``carry`` is the
+    final tenant-stacked carry — pass it back to ``run_fleet(carry=...)``
+    to resume every tenant mid-stream in one call.
+    """
+
+    name: str
+    kind: str
+    n_tenants: int
+    T: int  # requests replayed PER TENANT (num_chunks * window)
+    window: int
+    capacities: np.ndarray  # (E,)
+    seeds: np.ndarray  # (E,) (-1 on resumed runs: seeds live in the carry)
+    etas: Optional[np.ndarray]  # (E,) resolved per-tenant eta, fractional only
+    reward: np.ndarray  # (E, M)
+    hits: np.ndarray  # (E, M)
+    aux: np.ndarray  # (E, M)
+    occupancy: np.ndarray  # (E, M)
+    opt_hits: np.ndarray  # (E,) per-tenant hindsight static OPT (0 if untracked)
+    carry: Any = None  # final tenant-stacked device carry (resumable)
+    wall_seconds: float = 0.0
+    byte_hits: Optional[np.ndarray] = None  # (E, M) sized runs only
+    bytes_total: Optional[np.ndarray] = None  # (E,) bytes requested per tenant
+    n_segments: int = 1  # dispatches (1 for in-memory run_fleet)
+    t_dropped: int = 0  # unreplayed tail requests across the fleet (stream)
+    prefetch: int = 0
+
+    @property
+    def total_requests(self) -> int:
+        """Requests replayed across the whole fleet (E * T)."""
+        return self.n_tenants * self.T
+
+    @property
+    def tenant_hit_ratios(self) -> np.ndarray:
+        """(E,) integral hit ratio of each tenant."""
+        return self.hits.sum(axis=1) / max(self.T, 1)
+
+    @property
+    def tenant_frac_ratios(self) -> np.ndarray:
+        """(E,) fractional (OCO) reward ratio of each tenant."""
+        return self.reward.sum(axis=1) / max(self.T, 1)
+
+    @property
+    def regrets(self) -> np.ndarray:
+        """(E,) per-tenant hindsight regret of the fractional reward."""
+        return self.opt_hits - self.reward.sum(axis=1)
+
+    @property
+    def hit_ratio(self) -> float:
+        """Aggregate hit ratio over every request the fleet served."""
+        return float(self.hits.sum()) / max(self.total_requests, 1)
+
+    @property
+    def hit_ratio_mean(self) -> float:
+        return float(self.tenant_hit_ratios.mean())
+
+    @property
+    def hit_ratio_p5(self) -> float:
+        """5th-percentile tenant hit ratio — the tail tenants SLOs live on."""
+        return float(np.percentile(self.tenant_hit_ratios, 5.0))
+
+    @property
+    def hit_ratio_p95(self) -> float:
+        return float(np.percentile(self.tenant_hit_ratios, 95.0))
+
+    @property
+    def byte_hit_ratio(self) -> float:
+        """Fleet-aggregate byte hit ratio (object ratio when unsized)."""
+        if self.byte_hits is None or self.bytes_total is None:
+            return self.hit_ratio
+        bt = float(np.sum(self.bytes_total))
+        if bt <= 0.0:
+            return self.hit_ratio
+        return float(np.sum(self.byte_hits)) / bt
+
+    @property
+    def us_per_request(self) -> float:
+        """Aggregate dispatch cost per request across the fleet."""
+        return 1e6 * self.wall_seconds / max(self.total_requests, 1)
+
+    @property
+    def requests_per_second(self) -> float:
+        return self.total_requests / max(self.wall_seconds, 1e-12)
+
+
+@dataclass
+class EdgeFleetResult:
+    """Two-level edge->origin replay: E edge caches, one shared origin.
+
+    ``edges`` is the fleet replay of the per-edge request streams;
+    ``origin`` is the streamed replay of the deterministic interleave of
+    every edge miss (arrival-position major, edge index minor).
+    ``origin_requests`` counts every edge miss handed to the origin tier —
+    the origin replays its window-aligned prefix of them (its ``T``).
+    """
+
+    edges: "FleetResult"
+    origin: Any  # StreamResult of the origin cache over the miss stream
+    origin_requests: int
+
+    @property
+    def edge_hit_ratio(self) -> float:
+        return self.edges.hit_ratio
+
+    @property
+    def origin_hit_ratio(self) -> float:
+        return self.origin.hit_ratio
+
+    @property
+    def end_to_end_hit_ratio(self) -> float:
+        """Requests served by either tier over all edge-arriving requests."""
+        total = self.edges.total_requests
+        return float(self.edges.hits.sum() + self.origin.hits.sum()) / max(
+            total, 1
+        )

@@ -42,6 +42,7 @@ from repro.cachesim.tracelab.synth import (
     synthesize,
     synthesize_chunks,
     synthesize_sizes,
+    tenant_streams,
 )
 
 __all__ = [
@@ -57,5 +58,6 @@ __all__ = [
     "synthesize",
     "synthesize_chunks",
     "synthesize_sizes",
+    "tenant_streams",
     "write_trace",
 ]

@@ -69,6 +69,9 @@ def default_rules(*, multi_pod: bool = False) -> ShardingRules:
     return ShardingRules(
         rules={
             "batch": ("pod", "data") if multi_pod else "data",
+            # independent per-tenant caches (cachesim.fleet): embarrassingly
+            # parallel over the fleet, so they ride the data axis
+            "tenants": "data",
             "fsdp": "data",
             "heads": "model",
             "kv_heads": None,

@@ -186,34 +186,63 @@ def make_sharded_step(
     return step, f_sharding
 
 
+def _per_cache_param(value, n_caches: int, name: str) -> jax.Array:
+    """Normalize a scalar or (E,) per-cache parameter to an (E,) f32 array."""
+    arr = jnp.asarray(value, jnp.float32)
+    if arr.ndim == 0:
+        return jnp.full((n_caches,), arr)
+    if arr.shape != (n_caches,):
+        raise ValueError(
+            f"{name} must be a scalar or an ({n_caches},) array, got shape "
+            f"{arr.shape}"
+        )
+    return arr
+
+
 def make_fleet_step(
     mesh: Mesh,
     n_caches: int,
     catalog_size: int,
-    capacity: int,
+    capacity,
     batch: int,
-    eta: float,
+    eta,
     iters: int = DEFAULT_BISECT_ITERS,
     cache_axis: str = "data",
     catalog_axis: str = "model",
+    warm_start: bool = False,
+    sweeps: int = DEFAULT_WARM_SWEEPS,
 ):
     """E independent edge caches: f (E, N), ids (E, B). Per-cache projection.
 
     Caches shard over ``cache_axis``; the catalog dimension shards over
-    ``catalog_axis``; the bisection psum reduces over the catalog axis only,
+    ``catalog_axis``; the projection psum reduces over the catalog axis only,
     so caches never synchronize with each other (embarrassingly parallel
     across the fleet, as a real CDN deployment would be).
+
+    ``eta`` and ``capacity`` may each be a scalar (one value for the whole
+    fleet) or an ``(E,)`` array (heterogeneous edge nodes).  Scalars are
+    broadcast to ``(E,)`` internally, which is bitwise identical to the old
+    scalar-only path.
+
+    With ``warm_start=True`` the step becomes
+    ``step(f, ids, tau_prev) -> (f', reward, tau)`` with ``tau_prev``/``tau``
+    of shape ``(E,)``: each cache's projection runs the bracketed-Newton
+    iteration inside the provable warm bracket [0, eta_e*B], with a single
+    psum of the stacked per-cache (mass, interior-count) pair per sweep —
+    ``sweeps`` single-digit catalog sweeps instead of ``iters`` ~50 cold
+    bisection sweeps, and half the psums per sweep.  The fourth return value
+    is the (E,) tau sharding.
     """
     if n_caches % mesh.shape[cache_axis]:
         raise ValueError("n_caches must divide the cache axis")
     if catalog_size % mesh.shape[catalog_axis]:
         raise ValueError("catalog must divide the catalog axis")
     shard_n = catalog_size // mesh.shape[catalog_axis]
-    eta_f = jnp.float32(eta)
-    cap = float(capacity)
+    eta_all = _per_cache_param(eta, n_caches, "eta")
+    cap_all = _per_cache_param(capacity, n_caches, "capacity")
 
-    def local_step(f_local: jax.Array, ids_local: jax.Array):
-        # f_local: (E_loc, N_loc); ids_local: (E_loc, B)
+    def _prologue(f_local: jax.Array, ids_local: jax.Array, eta_c: jax.Array):
+        # f_local: (E_loc, N_loc); ids_local: (E_loc, B); eta_c: (E_loc,)
         offset = jax.lax.axis_index(catalog_axis) * shard_n
 
         def counts_and_reward(f_c, ids_c):
@@ -228,13 +257,18 @@ def make_fleet_step(
 
         counts, reward_part = jax.vmap(counts_and_reward)(f_local, ids_local)
         reward = jax.lax.psum(reward_part, catalog_axis)  # (E_loc,)
+        y = f_local + eta_c[:, None] * counts  # (E_loc, N_loc)
+        return y, reward
 
-        y = f_local + eta_f * counts  # (E_loc, N_loc)
-        e_loc = y.shape[0]
-        lo = jnp.zeros((e_loc,), jnp.float32)
-        hi = jnp.full((e_loc,), 1.0, jnp.float32) + eta_f * jnp.float32(
-            ids_local.shape[1]
-        )
+    def local_step(
+        f_local: jax.Array,
+        ids_local: jax.Array,
+        eta_c: jax.Array,
+        cap_c: jax.Array,
+    ):
+        y, reward = _prologue(f_local, ids_local, eta_c)
+        lo = jnp.zeros_like(eta_c)
+        hi = 1.0 + eta_c * jnp.float32(ids_local.shape[1])
         # mark the carries as varying over the cache axis (their updates
         # depend on f, which is sharded over it)
         lo = _mark_varying(lo, (cache_axis,))
@@ -247,20 +281,83 @@ def make_fleet_step(
                 jnp.sum(jnp.clip(y - mid[:, None], 0.0, 1.0), axis=1),
                 catalog_axis,
             )
-            pred = mass >= cap
+            pred = mass >= cap_c
             return jnp.where(pred, mid, lo), jnp.where(pred, hi, mid)
 
         lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
         tau = 0.5 * (lo + hi)
         return jnp.clip(y - tau[:, None], 0.0, 1.0), reward
 
+    def local_step_warm(
+        f_local: jax.Array,
+        ids_local: jax.Array,
+        tau_prev: jax.Array,
+        eta_c: jax.Array,
+        cap_c: jax.Array,
+    ):
+        y, reward = _prologue(f_local, ids_local, eta_c)
+        # provable per-cache bracket for a feasible f: tau_e in [0, eta_e*B]
+        lo = _mark_varying(jnp.zeros_like(eta_c), (cache_axis,))
+        hi = warm_bracket_hi(eta_c * jnp.float32(ids_local.shape[1]))
+        t = jnp.clip(tau_prev, lo, hi)
+
+        def body(_, carry):
+            lo, hi, t = carry
+            z = y - t[:, None]
+            part = jnp.stack(
+                [
+                    jnp.sum(jnp.clip(z, 0.0, 1.0), axis=1),
+                    jnp.sum(
+                        jnp.logical_and(z > 0.0, z < 1.0).astype(jnp.float32),
+                        axis=1,
+                    ),
+                ]
+            )  # (2, E_loc)
+            mass, cnt = jax.lax.psum(part, catalog_axis)  # one psum per sweep
+            too_much = mass >= cap_c
+            lo = jnp.where(too_much, t, lo)
+            hi = jnp.where(too_much, hi, t)
+            t_newton = t + (mass - cap_c) / jnp.maximum(cnt, 1.0)
+            t_mid = 0.5 * (lo + hi)
+            ok = jnp.logical_and(
+                cnt > 0.0, jnp.logical_and(t_newton >= lo, t_newton <= hi)
+            )
+            return lo, hi, jnp.where(ok, t_newton, t_mid)
+
+        _lo, _hi, tau = jax.lax.fori_loop(0, sweeps, body, (lo, hi, t))
+        return jnp.clip(y - tau[:, None], 0.0, 1.0), reward, tau
+
     f_spec = P(cache_axis, catalog_axis)
     ids_spec = P(cache_axis, None)
+    par_spec = P(cache_axis)  # per-cache params slice with their cache
+
+    if warm_start:
+        shard_fn = _shard_map_relaxed(
+            local_step_warm,
+            mesh=mesh,
+            in_specs=(f_spec, ids_spec, par_spec, par_spec, par_spec),
+            out_specs=(f_spec, par_spec, par_spec),
+        )
+
+        def step_warm(f, ids, tau_prev):
+            return shard_fn(f, ids, tau_prev, eta_all, cap_all)
+
+        return (
+            jax.jit(step_warm),
+            NamedSharding(mesh, f_spec),
+            NamedSharding(mesh, ids_spec),
+            NamedSharding(mesh, par_spec),
+        )
+
     shard_fn = _shard_map_relaxed(
         local_step,
         mesh=mesh,
-        in_specs=(f_spec, ids_spec),
-        out_specs=(f_spec, P(cache_axis)),
+        in_specs=(f_spec, ids_spec, par_spec, par_spec),
+        out_specs=(f_spec, par_spec),
     )
-    step = jax.jit(shard_fn)
+
+    def step_cold(f, ids):
+        return shard_fn(f, ids, eta_all, cap_all)
+
+    step = jax.jit(step_cold)
     return step, NamedSharding(mesh, f_spec), NamedSharding(mesh, ids_spec)

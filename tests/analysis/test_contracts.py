@@ -234,3 +234,46 @@ def test_costs_on_cost_blind_kind_must_reject():
             16, 4, seed=0, eta=0.05, horizon=64, n_slots=None,
             costs=np.ones(16),
         )
+
+
+# ---------------------------------------------------------------------------
+# fleet-stacking contract (cachesim.fleet tenant axis)
+# ---------------------------------------------------------------------------
+def test_every_kind_is_fleet_stackable():
+    """Every registered kind/flavor must pass the fleet checks: carries
+    built with different per-tenant capacity/seed under a shared n_slots
+    pad stack, and the stacked carry vmaps with per-tenant ids."""
+    for rep in check_all(include_flavors=True):
+        assert "fleet-stackable" in rep.checks, (rep.kind, rep.options)
+        assert "fleet-vmappable" in rep.checks, (rep.kind, rep.options)
+
+
+def test_capacity_shaped_carry_fails_fleet_stacking(scratch_registry):
+    class _SlotCarry(NamedTuple):
+        slots: jax.Array
+        t: jax.Array
+
+    def init(catalog_size, capacity, *, seed=0, eta=None, horizon=None,
+             n_slots=None, sizes=None, costs=None):
+        if sizes is not None or costs is not None:
+            raise ValueError("unit-size test policy")
+        # BUG: sizes a leaf by capacity and ignores the n_slots pad, so
+        # heterogeneous-capacity tenants cannot stack
+        return _SlotCarry(
+            slots=jnp.full(capacity, -1, jnp.int32),
+            t=jnp.zeros((), jnp.int32),
+        )
+
+    def step(carry, ids):
+        occ = jnp.sum((carry.slots >= 0).astype(jnp.float32))
+        return _SlotCarry(carry.slots, carry.t + 1), api.StepOut(
+            jnp.float32(0.0), jnp.int32(0), jnp.float32(0.0), occ
+        )
+
+    scratch_registry(
+        "broken_fleet",
+        api.PolicyDef(kind="broken_fleet", name="X", init=init, step=step),
+    )
+    rep = check_policy_def("broken_fleet")
+    assert not rep.ok
+    assert any("fleet-stacking" in e for e in rep.errors), rep.errors

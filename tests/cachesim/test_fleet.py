@@ -1,0 +1,363 @@
+"""Fleet differential harness: run_fleet vs E independent api.run calls.
+
+The whole fleet contract is that one vmapped dispatch is *exactly* E
+independent replays — so every trace-driven kind is checked bit-exact on
+hits/reward/aux/occupancy AND the final carry leaves, per tenant, against
+``api.run`` with the same (capacity, seed, eta, horizon, n_slots).  Plus:
+sweep==fleet parity on a shared trace, resume-mid-stream parity, the
+per-tenant ``default_eta`` regression, streamed==in-memory parity, and
+the edge->origin invariants.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.cachesim import api
+from repro.cachesim.fleet import (
+    run_edge_fleet,
+    run_edge_fleet_scenario,
+    run_fleet,
+    run_fleet_stream,
+)
+from repro.cachesim.tracelab import (
+    StreamFault,
+    fit_profile,
+    tenant_streams,
+)
+from repro.cachesim.traces import make_trace
+from repro.core.ogb import theoretical_eta
+
+N, W, T, E = 128, 50, 600, 3
+CAPS = [8, 16, 12]
+SEEDS = [3, 4, 5]
+TRACE_KINDS = ("ogb", "ogb_tree", "omd", "lru", "lfu", "fifo", "ftpl", "gds")
+SIZED_KINDS = ("gds", "ogb_sized")
+
+
+@pytest.fixture(scope="module")
+def traces():
+    return np.stack(
+        [make_trace("zipf", N, T, seed=7 + e, alpha=0.8) for e in range(E)]
+    )
+
+
+@pytest.fixture(scope="module")
+def sizes():
+    rng = np.random.default_rng(0)
+    return rng.choice([1.0, 4.0, 16.0], size=N).astype(np.float64)
+
+
+def _assert_rows_equal(fr, results):
+    for e, r in enumerate(results):
+        np.testing.assert_array_equal(fr.hits[e], r.hits)
+        np.testing.assert_array_equal(fr.reward[e], r.reward)
+        np.testing.assert_array_equal(fr.aux[e], r.aux)
+        np.testing.assert_array_equal(fr.occupancy[e], r.occupancy)
+
+
+def _assert_carry_rows_equal(fleet_carry, results):
+    fleet_leaves = jax.tree.leaves(fleet_carry)
+    for e, r in enumerate(results):
+        ind_leaves = jax.tree.leaves(r.carry)
+        assert jax.tree.structure(fleet_carry) == jax.tree.structure(r.carry)
+        for fl, il in zip(fleet_leaves, ind_leaves):
+            np.testing.assert_array_equal(
+                np.asarray(fl)[e], np.asarray(il)
+            )
+
+
+@pytest.mark.parametrize("kind", TRACE_KINDS)
+def test_fleet_matches_independent_runs(kind, traces):
+    pd = api.policy_def(kind)
+    fr = run_fleet(pd, traces, N, CAPS, window=W, seeds=SEEDS)
+    results = [
+        api.run(
+            pd, traces[e], N, CAPS[e], window=W, seed=SEEDS[e],
+            n_slots=max(CAPS),
+        )
+        for e in range(E)
+    ]
+    _assert_rows_equal(fr, results)
+    _assert_carry_rows_equal(fr.carry, results)
+    np.testing.assert_allclose(
+        fr.opt_hits, [r.opt_hits for r in results]
+    )
+
+
+@pytest.mark.parametrize("kind", SIZED_KINDS)
+def test_sized_fleet_matches_independent_runs(kind, traces, sizes):
+    pd = api.policy_def(kind)
+    fr = run_fleet(pd, traces, N, CAPS, window=W, seeds=SEEDS, sizes=sizes)
+    results = [
+        api.run(
+            pd, traces[e], N, CAPS[e], window=W, seed=SEEDS[e],
+            n_slots=max(CAPS), sizes=sizes,
+        )
+        for e in range(E)
+    ]
+    _assert_rows_equal(fr, results)
+    assert fr.byte_hits is not None
+    for e, r in enumerate(results):
+        np.testing.assert_array_equal(fr.byte_hits[e], r.byte_hits)
+        assert fr.bytes_total[e] == r.bytes_total
+
+
+@pytest.mark.parametrize("kind", ("ogb", "lru"))
+def test_fleet_matches_sweep_on_shared_trace(kind, traces):
+    """Same trace fanned over capacities: fleet rows == sweep rows."""
+    pd = api.policy_def(kind)
+    caps = (4, 8, 16)
+    sw = api.sweep(pd, traces[0], N, caps, seeds=(0,), window=W)
+    fr = run_fleet(
+        pd,
+        np.stack([traces[0]] * len(caps)),
+        N,
+        list(caps),
+        window=W,
+        seeds=0,
+        # sweep resolves eta at the shared trace horizon; match it so the
+        # fractional combos agree bit-exactly
+        horizons=T,
+    )
+    for i in range(len(caps)):
+        j = sw.row(capacity=caps[i])
+        np.testing.assert_array_equal(fr.hits[i], sw.hits[j])
+        np.testing.assert_array_equal(fr.reward[i], sw.reward[j])
+
+
+@pytest.mark.parametrize("kind", ("ogb", "lru"))
+def test_fleet_resume_mid_stream(kind, traces):
+    pd = api.policy_def(kind)
+    half = T // 2
+    full = run_fleet(
+        pd, traces, N, CAPS, window=W, seeds=SEEDS, track_opt=False
+    )
+    r1 = run_fleet(
+        pd, traces[:, :half], N, CAPS, window=W, seeds=SEEDS,
+        # the one-shot run resolves default_eta at T; pin the same horizon
+        horizons=T,
+        track_opt=False,
+    )
+    r2 = run_fleet(
+        pd, traces[:, half:], carry=r1.carry, capacities=CAPS,
+        window=W, track_opt=False,
+    )
+    np.testing.assert_array_equal(
+        np.concatenate([r1.hits, r2.hits], axis=1), full.hits
+    )
+    np.testing.assert_array_equal(
+        np.concatenate([r1.reward, r2.reward], axis=1), full.reward
+    )
+    _assert_carry_rows_equal(
+        full.carry,
+        [
+            type(
+                "R", (), {"carry": jax.tree.map(lambda x: x[e], r2.carry)}
+            )()
+            for e in range(E)
+        ],
+    )
+
+
+def test_fleet_resume_rejects_init_kwargs(traces):
+    pd = api.policy_def("ogb")
+    r = run_fleet(pd, traces, N, CAPS, window=W, track_opt=False)
+    with pytest.raises(ValueError, match="resumes with"):
+        run_fleet(pd, traces, window=W, carry=r.carry, seeds=SEEDS)
+
+
+def test_fleet_rejects_ragged_traces():
+    pd = api.policy_def("ogb")
+    with pytest.raises(ValueError, match="equal length"):
+        run_fleet(pd, [np.zeros(100, int), np.zeros(150, int)], N, 8,
+                  window=W)
+
+
+def test_fleet_rejects_non_trace_driven():
+    with pytest.raises(ValueError, match="trace-driven"):
+        run_fleet(
+            api.policy_def("ogb_grad"), np.zeros((2, 100), int), N, 8,
+            window=W,
+        )
+
+
+def test_default_eta_resolves_per_tenant(traces):
+    """The satellite-3 regression: a tenant replaying a T-slice gets the
+    Theorem-3.1 rate at ITS horizon, not at the fleet-aggregate E*T (nor
+    any other shared horizon)."""
+    pd = api.policy_def("ogb")
+    fr = run_fleet(pd, traces, N, CAPS, window=W, track_opt=False)
+    assert fr.etas is not None and fr.etas.shape == (E,)
+    for e in range(E):
+        expect = theoretical_eta(CAPS[e], N, T, 1)
+        assert fr.etas[e] == pytest.approx(expect, rel=1e-12)
+        # and it must NOT be the fleet-aggregate-horizon rate
+        assert fr.etas[e] != pytest.approx(
+            theoretical_eta(CAPS[e], N, E * T, 1), rel=1e-6
+        )
+    # heterogeneous horizons resolve each tenant at its own horizon
+    hor = [T, 2 * T, 4 * T]
+    fr2 = run_fleet(
+        pd, traces, N, CAPS, window=W, horizons=hor, track_opt=False
+    )
+    for e in range(E):
+        assert fr2.etas[e] == pytest.approx(
+            theoretical_eta(CAPS[e], N, hor[e], 1), rel=1e-12
+        )
+
+
+@pytest.mark.parametrize("kind", ("ogb", "lru"))
+@pytest.mark.parametrize("prefetch", (0, 2))
+def test_fleet_stream_matches_in_memory(kind, prefetch, traces):
+    """Ragged prime-sized source chunks re-batch to the same replay."""
+    pd = api.policy_def(kind)
+    fr = run_fleet(
+        pd, traces, N, CAPS, window=W, seeds=SEEDS, track_opt=False
+    )
+    sources = [
+        [traces[e][i : i + 97] for i in range(0, T, 97)] for e in range(E)
+    ]
+    fs = run_fleet_stream(
+        pd, sources, N, CAPS, window=W, seeds=SEEDS, horizons=T,
+        prefetch=prefetch, segment_len=200,
+    )
+    np.testing.assert_array_equal(fs.hits, fr.hits)
+    np.testing.assert_array_equal(fs.reward, fr.reward)
+    assert fs.n_segments == 3  # 600 per tenant / 200-aligned segments
+    assert fs.t_dropped == 0
+
+
+def test_fleet_stream_truncates_ragged_sources(traces):
+    """Unequal tenants truncate to the shortest window-aligned length."""
+    pd = api.policy_def("ogb")
+    sources = [[traces[0][:500]], [traces[1][:350]], [traces[2][:600]]]
+    fs = run_fleet_stream(
+        pd, sources, N, CAPS, window=W, seeds=SEEDS, horizons=T, prefetch=0
+    )
+    assert fs.T == 350  # 350 -> floor to window multiple
+    assert fs.t_dropped == (500 - 350) + 0 + (600 - 350)
+    fr = run_fleet(
+        pd, traces[:, :350], N, CAPS, window=W, seeds=SEEDS, horizons=T,
+        track_opt=False,
+    )
+    np.testing.assert_array_equal(fs.hits, fr.hits)
+
+
+def test_fleet_stream_synthesized_tenants():
+    """tenant_streams sources replay identically to their materialization."""
+    pd = api.policy_def("ogb")
+    profile = fit_profile(make_trace("zipf", N, 4000, seed=11, alpha=0.8))
+    t_s, e_s, cap = 300, 2, 12
+    fs = run_fleet_stream(
+        pd,
+        tenant_streams(profile, e_s, t_s, catalog=N, base_seed=5),
+        N,
+        cap,
+        window=W,
+        horizons=t_s,
+        track_opt=True,
+    )
+    mem = np.stack(
+        [
+            np.concatenate(
+                list(
+                    tenant_streams(profile, e_s, t_s, catalog=N,
+                                   base_seed=5)[e]
+                )
+            )
+            for e in range(e_s)
+        ]
+    )
+    fr = run_fleet(pd, mem, N, cap, window=W, horizons=t_s)
+    np.testing.assert_array_equal(fs.hits, fr.hits)
+    np.testing.assert_allclose(fs.opt_hits, fr.opt_hits)
+
+
+def test_fleet_stream_fault_carries_partial(traces):
+    def bad_source():
+        yield traces[0][:200]
+        raise OSError("disk gone")
+
+    sources = [bad_source(), [traces[1]], [traces[2]]]
+    with pytest.raises(StreamFault) as ei:
+        run_fleet_stream(
+            api.policy_def("ogb"), sources, N, CAPS, window=W,
+            horizons=T, prefetch=2, segment_len=100,
+        )
+    fault = ei.value
+    assert isinstance(fault.__cause__, OSError)
+    if fault.partial is not None:
+        assert fault.partial.T > 0
+        assert fault.partial.carry is not None
+
+
+def test_edge_fleet_invariants(traces):
+    ef = run_edge_fleet("lru", "ogb", traces, N, 8, 32, window=W)
+    # edge rows are exactly independent per-edge replays
+    pd = api.policy_def("lru")
+    for e in range(E):
+        r = api.run(pd, traces[e], N, 8, window=W, seed=e)
+        np.testing.assert_array_equal(ef.edges.hits[e], r.hits)
+    # conservation: every edge miss (and only those) reaches the origin
+    assert ef.origin_requests == E * T - int(ef.edges.hits.sum())
+    # the origin replays its window-aligned prefix of the miss stream
+    assert ef.origin.T == (ef.origin_requests // W) * W
+    assert 0.0 < ef.end_to_end_hit_ratio <= 1.0
+    assert ef.end_to_end_hit_ratio >= ef.edge_hit_ratio
+    # deterministic interleave -> bit-identical repeat
+    ef2 = run_edge_fleet("lru", "ogb", traces, N, 8, 32, window=W)
+    np.testing.assert_array_equal(ef.origin.hits, ef2.origin.hits)
+
+
+def test_edge_fleet_scenario_mini_runs():
+    ef = run_edge_fleet_scenario("edge_fleet_cdn", "mini")
+    assert ef.edges.n_tenants >= 2
+    assert 0.0 < ef.edges.hit_ratio_mean < 1.0
+    assert ef.edges.hit_ratio_p5 <= ef.edges.hit_ratio_p95
+    assert ef.origin.T > 0
+
+
+def test_fleet_sharded_matches_unsharded():
+    """Tenant axis over the data mesh axis: same results as unsharded."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+from repro.cachesim import api
+from repro.cachesim.fleet import run_fleet
+from repro.cachesim.traces import make_trace
+
+N, W, T, E = 128, 50, 400, 4
+traces = np.stack([make_trace("zipf", N, T, seed=e, alpha=0.8)
+                   for e in range(E)])
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+for kind, exact in (("lru", True), ("ogb", False)):
+    pd = api.policy_def(kind)
+    ref = run_fleet(pd, traces, N, 12, window=W, track_opt=False)
+    sh = run_fleet(pd, traces, N, 12, window=W, track_opt=False, mesh=mesh)
+    if exact:
+        np.testing.assert_array_equal(sh.hits, ref.hits)
+    else:
+        np.testing.assert_allclose(sh.reward, ref.reward, rtol=1e-5)
+        np.testing.assert_allclose(
+            sh.hits.astype(float), ref.hits.astype(float), atol=1.0
+        )
+print("OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.join(os.path.dirname(__file__), "..", ".."),
+    )
+    assert "OK" in out.stdout, out.stderr[-3000:]

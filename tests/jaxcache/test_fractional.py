@@ -146,3 +146,86 @@ print("OK")
         cwd=os.path.join(os.path.dirname(__file__), "..", ".."),
     )
     assert "OK" in out.stdout, out.stderr[-3000:]
+
+
+def test_fleet_step_warm_and_heterogeneous():
+    """Warm-bracket Newton fleet step: (a) scalar eta/capacity and their
+    (E,) broadcasts are bit-exact, (b) heterogeneous per-cache eta and
+    capacity match the per-cache ``ogb_batch_update`` oracle, (c) the warm
+    path tracks the cold bisection within bracket tolerance."""
+    import os
+    import subprocess
+    import sys
+
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np, jax.numpy as jnp
+from repro.jaxcache.fractional import FractionalState, ogb_batch_update
+from repro.jaxcache.sharded import make_fleet_step
+
+E, N, B = 4, 128, 32
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(2)
+ids_all = [jnp.asarray(rng.integers(0, N, size=(E, B)), jnp.int32)
+           for _ in range(4)]
+
+# (a) scalar params == (E,) broadcast, bit-exact
+C, eta = 16, 0.05
+step_s, f_sh, ids_sh = make_fleet_step(mesh, E, N, C, B, eta)
+step_v, _, _ = make_fleet_step(
+    mesh, E, N, jnp.full((E,), C, jnp.float32), B,
+    jnp.full((E,), eta, jnp.float32))
+f_s = jax.device_put(jnp.full((E, N), C / N, jnp.float32), f_sh)
+f_v = f_s
+for ids in ids_all:
+    ids = jax.device_put(ids, ids_sh)
+    f_s, r_s = step_s(f_s, ids)
+    f_v, r_v = step_v(f_v, ids)
+assert np.array_equal(np.asarray(f_s), np.asarray(f_v)), "broadcast drift"
+assert np.array_equal(np.asarray(r_s), np.asarray(r_v))
+
+# (b) heterogeneous (E,) eta/capacity vs the per-cache oracle
+caps = jnp.asarray([8.0, 16.0, 24.0, 32.0], jnp.float32)
+etas = jnp.asarray([0.02, 0.05, 0.08, 0.11], jnp.float32)
+step_h, f_sh, ids_sh = make_fleet_step(mesh, E, N, caps, B, etas)
+f = jnp.stack([jnp.full((N,), float(c) / N, jnp.float32) for c in caps])
+f = jax.device_put(f, f_sh)
+states = [FractionalState.create(N, int(c)) for c in caps]
+for ids in ids_all:
+    f, _ = step_h(f, jax.device_put(ids, ids_sh))
+    for e in range(E):
+        states[e], _ = ogb_batch_update(
+            states[e], ids[e], etas[e], int(caps[e]))
+        np.testing.assert_allclose(
+            np.asarray(f[e]), np.asarray(states[e].f), atol=5e-5)
+
+# (c) warm-start Newton vs cold bisection on the same stream
+warm, f_sh, ids_sh, tau_sh = make_fleet_step(
+    mesh, E, N, caps, B, etas, warm_start=True)
+f_w = jax.device_put(
+    jnp.stack([jnp.full((N,), float(c) / N, jnp.float32) for c in caps]),
+    f_sh)
+tau = jax.device_put(jnp.zeros((E,), jnp.float32), tau_sh)
+f_c = f_w
+for ids in ids_all:
+    f_w, _, tau = warm(f_w, jax.device_put(ids, ids_sh), tau)
+    f_c, _ = step_h(f_c, jax.device_put(ids, ids_sh))
+drift = float(jnp.max(jnp.abs(f_w - f_c)))
+assert drift < 1e-4, f"warm/cold drift {drift}"
+assert bool(jnp.all(tau >= 0.0)), "negative dual variable"
+# the warm path must actually hit the per-cache capacity constraints
+mass = jnp.sum(f_w, axis=1)
+np.testing.assert_allclose(np.asarray(mass), np.asarray(caps), rtol=1e-4)
+print("OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.join(os.path.dirname(__file__), "..", ".."),
+    )
+    assert "OK" in out.stdout, out.stderr[-3000:]
